@@ -1,0 +1,77 @@
+"""Kernel-level benchmark: arithmetic intensity + HBM traffic of the
+three binary-GEMM engines (paper §3.2 adapted to TPU, DESIGN.md §2).
+
+No TPU here, so the numbers that matter are *structural*: bytes moved
+per output element and per-engine FLOP/byte, computed from shapes —
+plus interpret-mode wall times at validation scale for completeness.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.kernels import ops as kops
+
+
+def traffic_model(m: int, k: int, n: int) -> dict:
+    """Bytes/HBM per GEMM for each engine (weights resident in HBM)."""
+    f32 = 4
+    rows = {
+        # float GEMM: w[m,k] f32 + x[k,n] f32 + out f32
+        "float_gemm": (m * k + k * n + m * n) * f32,
+        # paper xnor: packed w [m,k/32] i32 + packed x [k/32,n] i32 + out i32
+        "xnor_packed": (m * (k // 32) + (k // 32) * n) * 4 + m * n * 4,
+        # unpack-MXU: packed w + bf16 x + f32 out
+        "unpack_mxu": m * (k // 32) * 4 + k * n * 2 + m * n * 4,
+    }
+    flops = 2 * m * k * n
+    return {
+        name: {"bytes": b, "flops_per_byte": flops / b}
+        for name, b in rows.items()
+    }
+
+
+def run(verbose: bool = True) -> dict:
+    shapes = [(256, 1024, 256), (512, 4096, 512), (1024, 8192, 128)]
+    out = {}
+    for m, k, n in shapes:
+        tm = traffic_model(m, k, n)
+        out[f"{m}x{k}x{n}"] = tm
+        if verbose:
+            print(f"GEMM {m}x{k}x{n}:")
+            for name, row in tm.items():
+                print(f"  {name:12s} {row['bytes']/1e6:8.2f} MB "
+                      f"{row['flops_per_byte']:8.1f} FLOP/byte")
+            xr = tm['float_gemm']['bytes'] / tm['xnor_packed']['bytes']
+            print(f"  -> xnor moves {xr:.1f}x fewer bytes (paper's win on TPU)")
+
+    # interpret-mode correctness-scale timing (NOT a TPU perf claim)
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 512, 128
+    w = jnp.asarray(np.sign(rng.normal(size=(m, k))) + 0.0)
+    x = jnp.asarray(np.sign(rng.normal(size=(k, n))) + 0.0)
+    wp = bitops.pack_bits(w, axis=1)
+    xp = bitops.pack_bits(x, axis=0)
+
+    t0 = time.time()
+    ref = bitops.xnor_popcount_matmul(wp, xp, k).block_until_ready()
+    t_xla = time.time() - t0
+    t0 = time.time()
+    got = kops.xnor_gemm(wp, xp, k).block_until_ready()
+    t_pallas = time.time() - t0
+    assert bool(jnp.all(ref == got))
+    out["interpret_timing"] = {"xla_fallback_s": t_xla,
+                               "pallas_interpret_s": t_pallas}
+    if verbose:
+        print(f"xnor {m}x{k}x{n}: xla-fallback {t_xla:.3f}s, "
+              f"pallas-interpret {t_pallas:.3f}s (correctness-scale only)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Render the 40-cell roofline table from experiments/dryrun JSONs.
+
+Used both as a benchmark report and to generate EXPERIMENTS.md sections.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR, tag: str = "") -> list[dict]:
+    cells = []
+    if not os.path.isdir(dryrun_dir):
+        return cells
+    for name in sorted(os.listdir(dryrun_dir)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(dryrun_dir, name)) as f:
+            cell = json.load(f)
+        # each cell records the sweep tag it was produced under; "" is
+        # the baseline sweep, "opt" the final optimized one, hc* are
+        # hillclimb iterations
+        if cell.get("tag", "") == tag:
+            cells.append(cell)
+    return cells
+
+
+def fmt_row(c: dict) -> str:
+    base = f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+    if c["status"] == "skipped":
+        return base + f"| skipped | — | — | — | — | — | {c['reason'][:60]} |"
+    if c["status"] == "error":
+        return base + f"| ERROR | — | — | — | — | — | {c['error'][:60]} |"
+    r = c["roofline"]
+    return base + (
+        f"| ok | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+        f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+        f"| {r['mfu']:.3f} | useful={r['useful_flops_fraction']:.2f} |"
+    )
+
+
+def render(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | status | compute_s | memory_s | "
+           "collective_s | bottleneck | roofline MFU | notes |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr] + [fmt_row(c) for c in cells]
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True) -> str:
+    cells = load_cells()
+    table = render(cells)
+    ok = sum(c["status"] == "ok" for c in cells)
+    skip = sum(c["status"] == "skipped" for c in cells)
+    err = sum(c["status"] == "error" for c in cells)
+    summary = f"\n{ok} ok / {skip} skipped / {err} errors over {len(cells)} cells"
+    if verbose:
+        print(table)
+        print(summary)
+    return table + summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure
+plus the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    print("=" * 72)
+    print("Table 2 analogue — BNN CIFAR-10 inference, three kernel modes")
+    print("=" * 72)
+    from benchmarks import table2_bnn
+
+    table2_bnn.run()
+
+    print()
+    print("=" * 72)
+    print("Kernel microbench — binary-GEMM engines, traffic model (paper §3.2)")
+    print("=" * 72)
+    from benchmarks import kernel_microbench
+
+    kernel_microbench.run()
+
+    print()
+    print("=" * 72)
+    print("Roofline table — (arch x shape x mesh) from the dry-run")
+    print("=" * 72)
+    from benchmarks import roofline_table
+
+    roofline_table.run()
+
+
+if __name__ == "__main__":
+    main()

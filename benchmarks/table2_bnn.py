@@ -1,0 +1,103 @@
+"""Paper Table 2 analogue: BNN CIFAR-10 inference under the three
+kernel modes (§4.3/§4.4).
+
+2019 rows -> our rows (CPU/XLA, same-graph comparisons):
+
+  PyTorch       -> XLA float conv path (vendor-optimized analogue)
+  Control Group -> float32 im2col+GEMM forward graph (Figure 2), jit'd
+  Our Kernel    -> packed 1-bit weights, unpack+dot packed-storage
+                   engine ("xla", SPMD-safe) + the true xnor-popcount
+                   Pallas kernel validated in interpret mode
+
+The paper's wall-clock *speedup* claim is hardware-specific (x86
+POPCNT / CUDA __popc); the invariant we reproduce on any backend is
+(a) bit-exactness of the xnor-popcount path against the ±1 float GEMM
+and (b) the 32x weight compression; the TPU-side speed story is the
+roofline analysis (EXPERIMENTS.md §Roofline). Wall times below are
+reported for completeness.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bnn_cifar import (
+    CONTROL_GROUP,
+    PAPER_KERNEL,
+    SIMULATION,
+    XLA_PACKED,
+)
+from repro.core.binarize import QuantMode
+from repro.core.bnn import BNNConfig, bnn_apply, init_bnn_params, pack_bnn_params
+from repro.data.pipeline import DataConfig, synthetic_cifar_batches
+
+
+def _bytes_of(tree) -> int:
+    return sum(
+        np.asarray(x).nbytes for x in jax.tree.leaves(tree)
+        if hasattr(x, "nbytes") or isinstance(x, (np.ndarray, jnp.ndarray))
+    )
+
+
+def run(batch: int = 64, num_batches: int = 4, verbose: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = init_bnn_params(key)
+    packed = pack_bnn_params(params)
+
+    data = synthetic_cifar_batches(DataConfig(global_batch=batch))
+    batches = [next(data)["images"] for _ in range(num_batches)]
+
+    rows = {}
+    for name, cfg, p in [
+        ("float_xla (PyTorch row)", CONTROL_GROUP, params),
+        ("fake_quant (simulation)", SIMULATION, params),
+        ("packed_xla (Our Kernel)", XLA_PACKED, packed),
+    ]:
+        fn = jax.jit(lambda pr, x, c=cfg: bnn_apply(pr, x, c))
+        fn(p, batches[0]).block_until_ready()  # compile
+        t0 = time.time()
+        for x in batches:
+            out = fn(p, x)
+        out.block_until_ready()
+        dt = time.time() - t0
+        rows[name] = {
+            "seconds": dt,
+            "imgs_per_s": batch * num_batches / dt,
+            "weight_bytes": _bytes_of(
+                [q for q in jax.tree.leaves(p)]
+            ),
+        }
+        if verbose:
+            print(f"{name:28s} {dt:7.3f}s  {rows[name]['imgs_per_s']:8.1f} img/s"
+                  f"  weights {rows[name]['weight_bytes']/1e6:7.2f} MB")
+
+    # bit-exactness of the paper's xnor kernel vs the ±1 float GEMM
+    from repro.core import bitops
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(np.sign(rng.normal(size=(64, 256))) + 0.0)
+    x = jnp.asarray(np.sign(rng.normal(size=(256, 32))) + 0.0)
+    wp = bitops.pack_bits(w, axis=1)
+    xp = bitops.pack_bits(x, axis=0)
+    ref = (w @ x).astype(np.int32)
+    got = kops.xnor_gemm(wp, xp, 256)
+    exact = bool(jnp.all(got == ref))
+    rows["xnor_bit_exact"] = exact
+    compression = (
+        rows["float_xla (PyTorch row)"]["weight_bytes"]
+        / rows["packed_xla (Our Kernel)"]["weight_bytes"]
+    )
+    rows["weight_compression_x"] = compression
+    if verbose:
+        print(f"xnor-popcount bit-exact vs ±1 GEMM: {exact}")
+        print(f"weight compression: {compression:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Data-parallel training with error-feedback int8 gradient compression
+(shard_map path — see distributed/compression.py scope note).
+
+Runs on however many devices exist; with 1 device the collective is a
+no-op but the quantize/EF math is exercised end to end, and the loss
+still converges — demonstrating the compression does not break training.
+
+  PYTHONPATH=src python examples/ddp_compression.py
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import compression
+
+
+def main():
+    devices = np.asarray(jax.devices())
+    mesh = Mesh(devices, ("data",))
+    ndev = len(devices)
+    print(f"devices: {ndev}")
+
+    # toy regression model
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(32, 1)).astype(np.float32)
+    X = rng.normal(size=(128 * ndev, 32)).astype(np.float32)
+    Y = X @ w_true + 0.01 * rng.normal(size=(128 * ndev, 1)).astype(np.float32)
+
+    w = jnp.zeros((32, 1))
+    err = jnp.zeros_like(w)
+
+    @jax.jit
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P("data"), P("data"), P()),
+        out_specs=(P(), P()),
+    )
+    def step(w, x, y, err):
+        def loss_fn(w):
+            return jnp.mean((x @ w - y) ** 2)
+
+        g = jax.grad(loss_fn)(w)
+        # EF-int8 all-reduce: int8 payload on the wire (4x fewer bytes)
+        g_mean, err = compression.psum_compressed(g, err, "data")
+        return w - 0.05 * g_mean, err
+
+    for i in range(200):
+        w, err = step(w, jnp.asarray(X), jnp.asarray(Y), err)
+    final = float(jnp.mean((jnp.asarray(X) @ w - jnp.asarray(Y)) ** 2))
+    print(f"final mse {final:.5f} (w err {float(jnp.max(jnp.abs(w - w_true))):.4f})")
+    assert final < 1e-2, "compressed DP training failed to converge"
+    print("EF-int8 compressed data-parallel training converged OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Sharded, checksummed, async checkpointing with auto-resume.
+
+Layout per step:
+
+  <dir>/step_000100/
+    tree.json            # pytree structure + per-leaf shape/dtype
+    shard_00000.npz      # leaves (one file per host in multi-host runs)
+    MANIFEST.json        # per-file sha256 + leaf index; written LAST
+
+A checkpoint is valid iff MANIFEST.json exists and every checksum
+matches — a process killed mid-write leaves no MANIFEST, so
+``latest_valid_step`` silently skips it (torn-write safety, the
+restart half of fault tolerance). ``AsyncCheckpointer`` moves the
+serialization off the training thread and overlaps it with compute;
+``restore`` reshards to *whatever mesh is current* because leaves are
+read as plain numpy and re-placed with ``jax.device_put`` under the
+caller's shardings — this is what makes elastic restarts
+(distributed/fault_tolerance.py) a pure restore-path feature.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save(directory: str, step: int, tree, *, host_id: int = 0) -> str:
+    """Blocking save. Returns the checkpoint path."""
+    ckpt = os.path.join(directory, f"step_{step:08d}")
+    tmp = ckpt + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _leaf_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [
+            {"key": k, "shape": list(np.shape(v)), "dtype": str(np.asarray(v).dtype)}
+            for k, v in leaves
+        ],
+    }
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump(meta, f)
+
+    shard = os.path.join(tmp, f"shard_{host_id:05d}.npz")
+    np.savez(shard, **{k: np.asarray(v) for k, v in leaves})
+
+    manifest = {
+        "step": step,
+        "files": {
+            name: _sha256(os.path.join(tmp, name))
+            for name in os.listdir(tmp)
+            if name != "MANIFEST.json"
+        },
+    }
+    # manifest written last + atomic rename => torn writes are invisible
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(ckpt):
+        shutil.rmtree(ckpt)
+    os.rename(tmp, ckpt)
+    return ckpt
+
+
+def is_valid(ckpt: str) -> bool:
+    mpath = os.path.join(ckpt, "MANIFEST.json")
+    if not os.path.exists(mpath):
+        return False
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for name, digest in manifest["files"].items():
+            if _sha256(os.path.join(ckpt, name)) != digest:
+                return False
+        return True
+    except (OSError, json.JSONDecodeError, KeyError):
+        return False
+
+
+def latest_valid_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for step in reversed(steps):
+        if is_valid(os.path.join(directory, f"step_{step:08d}")):
+            return step
+    return None
+
+
+def restore(directory: str, step: int, like, *, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` (same structure) re-places each
+    leaf on the *current* mesh — elastic resharding for free."""
+    ckpt = os.path.join(directory, f"step_{step:08d}")
+    data: dict[str, np.ndarray] = {}
+    for name in sorted(os.listdir(ckpt)):
+        if name.startswith("shard_"):
+            with np.load(os.path.join(ckpt, name)) as z:
+                data.update({k: z[k] for k in z.files})
+
+    keys = [k for k, _ in _leaf_paths(like)]
+    leaves = [data[k] for k in keys]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda leaf, s: jax.device_put(leaf, s), tree, shardings
+        )
+    return tree
+
+
+def retain(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for step in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{step:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Serializes checkpoints on a background thread.
+
+    ``save`` enqueues a host-side snapshot (jax.device_get, the only
+    synchronous part) and returns; the writer thread does npz + sha256.
+    ``wait()`` drains the queue (call before exit / before restore).
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._errors: list[BaseException] = []
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, tree = item
+            try:
+                save(self.directory, step, tree)
+                retain(self.directory, self.keep)
+            except BaseException as e:  # surfaced by wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]

@@ -1,0 +1,26 @@
+"""The paper's own evaluation setup: Courbariaux BNN on CIFAR-10
+(paper §4.2) with the three kernel modes of Table 2.
+
+This is not an LM config — the model lives in ``repro.core.bnn``; this
+module records the experiment configuration the benchmarks use.
+"""
+
+import dataclasses
+
+from repro.core.binarize import QuantMode
+from repro.core.bnn import BNNConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNExperiment:
+    name: str
+    batch: int = 64
+    num_batches: int = 16     # timed inference batches (paper used 10k imgs)
+
+
+# paper Table 2 rows (our analogue, same-graph comparisons under XLA CPU)
+PAPER_KERNEL = BNNConfig(mode=QuantMode.PACKED, engine="xnor")     # "Our Kernel"
+MXU_KERNEL = BNNConfig(mode=QuantMode.PACKED, engine="unpack")     # beyond-paper
+XLA_PACKED = BNNConfig(mode=QuantMode.PACKED, engine="xla")        # SPMD engine
+CONTROL_GROUP = BNNConfig(mode=QuantMode.FLOAT)                    # "Control Group"
+SIMULATION = BNNConfig(mode=QuantMode.FAKE_QUANT)                  # released BNNs

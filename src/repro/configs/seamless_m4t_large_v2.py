@@ -1,0 +1,26 @@
+"""seamless-m4t-large-v2 — encoder-decoder, multimodal (audio STUB).
+
+[arXiv:2308.11596; hf] 24L d_model=1024 16H (kv=16) d_ff=8192
+vocab=256206. The speech frontend is a stub per the assignment:
+``input_specs()`` provides precomputed frame embeddings for the encoder.
+Vocab pads 256206 -> 256256 so the embedding row-shards 16-way.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,            # decoder depth
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256_206,
+    input_kind="embeddings",
+    norm="layernorm",
+    act="gelu",
+    rope_theta=10_000.0,
+))

@@ -1,0 +1,21 @@
+"""smollm-360m — llama-arch small model (sanity point).
+
+[hf:HuggingFaceTB/SmolLM-135M family; hf] 32L d_model=960 15H (GQA kv=5)
+d_ff=2560 vocab=49152. Tied embeddings.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=49_152,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+))

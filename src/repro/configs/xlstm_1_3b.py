@@ -1,0 +1,21 @@
+"""xlstm-1.3b — sLSTM + mLSTM blocks (1 sLSTM per 8-layer period).
+
+[arXiv:2405.04517; unverified] 48L d_model=2048 4H (kv=4) d_ff=0
+(xLSTM blocks carry their own up/down projections) vocab=50304.
+Recurrent, O(1) decode state -> owns the long_500k cell.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50_304,
+    slstm_every=8,
+))

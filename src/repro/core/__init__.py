@@ -1,0 +1,26 @@
+"""Core binarization library — the paper's contribution as JAX modules."""
+
+from repro.core.binarize import (  # noqa: F401
+    QuantMode,
+    binarize_activations,
+    binarize_weights,
+    ste_sign,
+    weight_scale,
+)
+from repro.core.bitops import (  # noqa: F401
+    PACK_BITS,
+    PACKED_DTYPE,
+    pack_bits,
+    packed_matmul_unpack,
+    unpack_bits,
+    xnor_popcount_matmul,
+)
+from repro.core.layers import (  # noqa: F401
+    BitLinearConfig,
+    bit_conv2d,
+    bit_linear,
+    init_conv,
+    init_linear,
+    pack_conv_params,
+    pack_linear_params,
+)

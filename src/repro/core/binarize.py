@@ -1,0 +1,72 @@
+"""Binarization math: deterministic sign, straight-through estimator,
+XNOR-Net scale factors, and quantization-mode plumbing.
+
+The paper (and BNN [Courbariaux et al. 2016], which it reproduces)
+binarizes with ``Sign(x)`` forward and a hard-tanh straight-through
+estimator backward; weights keep a latent real value during training and
+only the packed 1-bit form is used at inference (paper §4.2, §3.1).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantMode(str, enum.Enum):
+    """How a Bit* layer executes.
+
+    FLOAT        — plain matmul on the latent real weights (control group).
+    FAKE_QUANT   — training / "simulation": ±1 values held in float,
+                   STE gradients (what released PyTorch BNNs do, §1).
+    PACKED       — inference: 1-bit packed int32 weights, xnor-popcount
+                   or unpack->MXU contraction (the paper's kernel).
+    """
+
+    FLOAT = "float"
+    FAKE_QUANT = "fake_quant"
+    PACKED = "packed"
+
+
+@jax.custom_vjp
+def ste_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """Sign with sign(0) := +1 and hard-tanh STE gradient."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x, g):
+    # Htanh STE: pass gradient where |x| <= 1 (BNN eq. 4).
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+def weight_scale(w: jnp.ndarray, axis=-1, keepdims: bool = True) -> jnp.ndarray:
+    """XNOR-Net per-output-channel scale: alpha = mean(|W|) along the
+    contraction axis. Beyond-paper accuracy refinement; the faithful
+    BNN path uses scale == 1."""
+    return jnp.mean(jnp.abs(w), axis=axis, keepdims=keepdims)
+
+
+def binarize_weights(
+    w: jnp.ndarray, *, scale_axis: Optional[int] = None
+) -> tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Latent weights -> (±1 fake-quant weights, optional alpha scale)."""
+    wb = ste_sign(w)
+    if scale_axis is None:
+        return wb, None
+    alpha = jax.lax.stop_gradient(weight_scale(w, axis=scale_axis))
+    return wb, alpha
+
+
+def binarize_activations(x: jnp.ndarray, clip: float = 1.0) -> jnp.ndarray:
+    """Htanh then sign, the BNN activation binarization."""
+    return ste_sign(jnp.clip(x, -clip, clip))

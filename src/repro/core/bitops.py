@@ -1,0 +1,151 @@
+"""Bit-packing and xnor-popcount primitives (pure-JAX reference semantics).
+
+This module is the *semantic* definition of the paper's encoding:
+
+* binary "values" are {-1, +1}; binary "encodings" are {0, 1} with
+  ``1 <-> +1`` (paper §3.1),
+* 32 one-bit encodings pack into one ``int32`` word, LSB-first along the
+  contraction (K) axis,
+* ``a_ij = sum_k 2*popcount(xnor(w_ik, x_kj)) - K`` reproduces the exact
+  ±1 dot product (paper §3.2).
+
+The Pallas kernels in ``repro.kernels`` implement the same contract for
+TPU; everything here is the oracle they are tested against, and the
+XLA fallback used inside large jit'd programs (the interpreter-mode
+Pallas path cannot live inside a 512-way SPMD program on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PACK_BITS = 32
+PACKED_DTYPE = jnp.int32
+
+__all__ = [
+    "PACK_BITS",
+    "PACKED_DTYPE",
+    "pack_bits",
+    "unpack_bits",
+    "popcount",
+    "xnor_popcount_matmul",
+    "packed_matmul_unpack",
+    "pad_packed_operands",
+]
+
+
+def _shift_vector(dtype=PACKED_DTYPE) -> jnp.ndarray:
+    return jnp.arange(PACK_BITS, dtype=dtype)
+
+
+def pack_bits(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Pack the sign bits of ``x`` along ``axis`` into int32 words.
+
+    ``x`` holds real numbers; the binarization convention is
+    ``bit = 1 if x >= 0 else 0`` (sign(0) := +1, as in BNN training).
+    ``x.shape[axis]`` must be a multiple of 32. Bit ``b`` of word ``w``
+    encodes element ``w * 32 + b`` (LSB-first).
+    """
+    axis = axis % x.ndim
+    k = x.shape[axis]
+    if k % PACK_BITS != 0:
+        raise ValueError(f"pack axis length {k} not a multiple of {PACK_BITS}")
+    x = jnp.moveaxis(x, axis, -1)
+    bits = (x >= 0).astype(PACKED_DTYPE)
+    bits = bits.reshape(*x.shape[:-1], k // PACK_BITS, PACK_BITS)
+    words = jnp.sum(bits << _shift_vector(), axis=-1).astype(PACKED_DTYPE)
+    return jnp.moveaxis(words, -1, axis)
+
+
+def unpack_bits(words: jnp.ndarray, axis: int = -1, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`: int32 words -> ±1 values along ``axis``."""
+    axis = axis % words.ndim
+    w = jnp.moveaxis(words, axis, -1)
+    bits = (w[..., None] >> _shift_vector()) & 1
+    vals = (2 * bits - 1).astype(dtype)
+    vals = vals.reshape(*w.shape[:-1], w.shape[-1] * PACK_BITS)
+    return jnp.moveaxis(vals, -1, axis)
+
+
+def popcount(x: jnp.ndarray) -> jnp.ndarray:
+    """Population count on the raw bit pattern (int32-safe)."""
+    return lax.population_count(x)
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "block_kw"))
+def xnor_popcount_matmul(
+    wp: jnp.ndarray, xp: jnp.ndarray, k_bits: int, block_kw: int = 64
+) -> jnp.ndarray:
+    """Paper §3.2: packed [M, KW] x [KW, N] -> int32 [M, N].
+
+    ``a_ij = 2 * sum_k popcount(~(w_ik ^ x_kj)) - k_bits``.
+
+    Blocked over KW to bound the [M, bkw, N] broadcast intermediate;
+    this is the XLA fallback — the Pallas kernel does the same with
+    explicit VMEM tiles.
+    """
+    m, kw = wp.shape
+    kw2, n = xp.shape
+    assert kw == kw2, (wp.shape, xp.shape)
+
+    nblk = -(-kw // block_kw)
+    pad = nblk * block_kw - kw
+    if pad:
+        # pad pairs (w=0x0, x=~0) xnor to 0 -> contribute zero popcount.
+        wp = jnp.pad(wp, ((0, 0), (0, pad)))
+        xp = jnp.pad(xp, ((0, pad), (0, 0)), constant_values=-1)
+
+    def body(i, acc):
+        wblk = lax.dynamic_slice_in_dim(wp, i * block_kw, block_kw, axis=1)
+        xblk = lax.dynamic_slice_in_dim(xp, i * block_kw, block_kw, axis=0)
+        xnor = ~(wblk[:, :, None] ^ xblk[None, :, :])
+        return acc + jnp.sum(popcount(xnor).astype(jnp.int32), axis=1)
+
+    acc = lax.fori_loop(0, nblk, body, jnp.zeros((m, n), jnp.int32))
+    return 2 * acc - jnp.int32(k_bits)
+
+
+def packed_matmul_unpack(
+    wp: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    compute_dtype=jnp.bfloat16,
+    accum_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """TPU-native variant: packed weights [M, KW] x real/±1 input [K, N].
+
+    Weights stay packed in HBM (32x footprint win); unpack happens
+    on-chip and the contraction runs on the MXU (kernels/unpack_gemm.py
+    is the Pallas implementation — packed words are staged HBM->VMEM and
+    the unpacked ±1 tile never exists in HBM). The XLA fallback here
+    necessarily materializes the unpacked weight, so that traffic is
+    scoped vmem_fusible for the roofline: the packed-word reads (the
+    REAL HBM traffic) are counted via the w_packed slice reads.
+    """
+    with jax.named_scope("vmem_fusible"):
+        w = unpack_bits(wp, axis=-1, dtype=compute_dtype)
+        out = jnp.dot(w, x.astype(compute_dtype),
+                      preferred_element_type=accum_dtype)
+    return out
+
+
+def pad_packed_operands(wp, xp, block_m, block_n, block_kw):
+    """Pad packed GEMM operands so every dim tiles evenly.
+
+    K-padding uses the (w=0, x=all-ones) trick so padded words contribute
+    zero popcount; M/N padding is sliced off by the caller.
+    """
+    m, kw = wp.shape
+    _, n = xp.shape
+    pm = -m % block_m
+    pn = -n % block_n
+    pk = -kw % block_kw
+    if pm or pk:
+        wp = jnp.pad(wp, ((0, pm), (0, pk)))
+    if pk or pn:
+        xp = jnp.pad(xp, ((0, pk), (0, pn)), constant_values=-1)
+    return wp, xp, m, n

@@ -1,0 +1,172 @@
+"""The paper's evaluation model: Courbariaux-style Binarized Neural
+Network for CIFAR-10 (paper §4.2), plus the float32 control group (§4.3).
+
+Architecture (the BNN paper's CIFAR-10 ConvNet, VGG-like):
+
+    2x(128C3) - MaxPool2 - 2x(256C3) - MaxPool2 - 2x(512C3) - MaxPool2
+    - 1024FC - 1024FC - 10FC
+
+BatchNorm after every conv/FC; Htanh+Sign activations between binary
+layers. The first conv consumes real-valued images (standard BNN
+practice); every other layer is binarized. All three execution modes
+share this one graph:
+
+  * ``QuantMode.FLOAT``      — the paper's control group: identical
+    im2col->Gemm-Accumulation->bias forward graph, float32, no vendor-
+    tuned conv (exactly the paper's "no cuDNN/MKL" control).
+  * ``QuantMode.FAKE_QUANT`` — training / the "simulation" released
+    PyTorch BNNs run (±1 in float math, STE backward).
+  * ``QuantMode.PACKED``     — the paper's kernel: 1-bit packed weights,
+    xnor-popcount (engine="xnor") or unpack->MXU (engine="unpack").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.binarize import QuantMode, binarize_activations
+from repro.core.layers import (
+    BitLinearConfig,
+    bit_conv2d,
+    bit_linear,
+    init_conv,
+    init_linear,
+    pack_conv_params,
+    pack_linear_params,
+)
+
+CONV_CHANNELS = [(3, 128), (128, 128), (128, 256), (256, 256), (256, 512), (512, 512)]
+POOL_AFTER = {1, 3, 5}  # maxpool after conv index
+FC_SIZES = [(512 * 4 * 4, 1024), (1024, 1024), (1024, 10)]
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNConfig:
+    mode: QuantMode = QuantMode.FAKE_QUANT
+    engine: str = "xnor"
+    use_scale: bool = False
+    num_classes: int = 10
+
+    def layer_cfg(self, *, binarize_acts: bool) -> BitLinearConfig:
+        return BitLinearConfig(
+            mode=self.mode,
+            engine=self.engine,
+            use_scale=self.use_scale,
+            binarize_acts=binarize_acts,
+        )
+
+
+def _init_bn(width: int) -> dict:
+    return {
+        "gamma": jnp.ones((width,)),
+        "beta": jnp.zeros((width,)),
+        "mean": jnp.zeros((width,)),
+        "var": jnp.ones((width,)),
+    }
+
+
+def init_bnn_params(key) -> dict[str, Any]:
+    params: dict[str, Any] = {"conv": [], "bn_conv": [], "fc": [], "bn_fc": []}
+    for i, (cin, cout) in enumerate(CONV_CHANNELS):
+        key, sub = jax.random.split(key)
+        params["conv"].append(init_conv(sub, 3, 3, cin, cout, bias=True))
+        params["bn_conv"].append(_init_bn(cout))
+    for i, (fin, fout) in enumerate(FC_SIZES):
+        key, sub = jax.random.split(key)
+        params["fc"].append(init_linear(sub, fin, fout, bias=True))
+        params["bn_fc"].append(_init_bn(fout))
+    return params
+
+
+def pack_bnn_params(params: dict, *, use_scale: bool = False) -> dict:
+    """Latent float params -> packed 1-bit inference params (paper §3.1).
+
+    The first conv stays float (real-valued image input), matching BNN
+    practice and the paper's "kernel is only for convolution computation"
+    scoping — we keep its float weights alongside the packed rest.
+    """
+    packed: dict[str, Any] = {
+        "conv": [params["conv"][0]]
+        + [pack_conv_params(p, use_scale=use_scale) for p in params["conv"][1:]],
+        "fc": [pack_linear_params(p, use_scale=use_scale) for p in params["fc"]],
+        "bn_conv": params["bn_conv"],
+        "bn_fc": params["bn_fc"],
+    }
+    return packed
+
+
+def _batchnorm(p: dict, x: jnp.ndarray, training: bool) -> jnp.ndarray:
+    axes = tuple(range(x.ndim - 1))
+    if training:
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+    else:
+        mean, var = p["mean"], p["var"]
+    inv = lax.rsqrt(var + 1e-4)
+    return (x - mean) * inv * p["gamma"] + p["beta"]
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def bnn_apply(
+    params: dict,
+    images: jnp.ndarray,
+    cfg: BNNConfig,
+    *,
+    training: bool = False,
+) -> jnp.ndarray:
+    """images [N, 32, 32, 3] -> logits [N, 10]."""
+    x = images
+    packed = cfg.mode == QuantMode.PACKED
+    for i in range(len(CONV_CHANNELS)):
+        first = i == 0
+        if first and packed:
+            # First conv consumes real-valued images, so it cannot use the
+            # packed-activation kernel; its weights are still binarized
+            # (fake-quant math on the retained float params) — the BNN
+            # convention and the paper's "kernel is only for the
+            # binary-input convolutions" scoping.
+            lcfg = BitLinearConfig(
+                mode=QuantMode.FAKE_QUANT,
+                binarize_acts=False,
+                use_scale=cfg.use_scale,
+            )
+        else:
+            lcfg = cfg.layer_cfg(binarize_acts=not first)
+        x = bit_conv2d(
+            params["conv"][i], x, lcfg, stride=1, pad=1,
+            kh=3 if packed else None, kw=3 if packed else None,
+        )
+        x = _batchnorm(params["bn_conv"][i], x, training)
+        if i in POOL_AFTER:
+            x = _maxpool2(x)
+        x = binarize_activations(x) if not packed else jnp.clip(x, -1, 1)
+        # (in packed mode the next layer's engine re-binarizes/encodes,
+        #  mirroring the paper's encode-on-the-fly input path)
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    for j in range(len(FC_SIZES)):
+        last = j == len(FC_SIZES) - 1
+        lcfg = cfg.layer_cfg(binarize_acts=True)
+        x = bit_linear(params["fc"][j], x, lcfg)
+        x = _batchnorm(params["bn_fc"][j], x, training)
+        if not last:
+            x = binarize_activations(x) if not packed else jnp.clip(x, -1, 1)
+    return x
+
+
+def bnn_loss(params, images, labels, cfg: BNNConfig):
+    logits = bnn_apply(params, images, cfg, training=True)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, acc

@@ -1,0 +1,49 @@
+"""im2col / col2im — the paper's §2.1 convolution lowering, in JAX.
+
+Layout convention (paper Figure 1): a conv between input feature map
+``[N, H, W, C]`` and filters ``[D, kH, kW, C]`` becomes a GEMM between
+the filter matrix ``[D, kH*kW*C]`` and the patch matrix
+``[kH*kW*C, N*OH*OW]``. Row index ``(h*kW + w)*C + c`` — the same
+ordering ``filters_to_matrix`` uses, so the two always agree.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0):
+    """[N, H, W, C] -> patches [N, OH*OW, kH*kW*C].
+
+    Static python loop over the (small) kernel window keeps the ordering
+    explicit and lets XLA fuse the slices.
+    """
+    n, h, w, c = x.shape
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            cols.append(patch)
+    # [N, OH, OW, kH*kW, C] -> [N, OH*OW, kH*kW*C]
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(n, oh * ow, kh * kw * c), (oh, ow)
+
+
+def filters_to_matrix(w: jnp.ndarray) -> jnp.ndarray:
+    """[D, kH, kW, C] -> [D, kH*kW*C] matching :func:`im2col` ordering."""
+    d = w.shape[0]
+    return w.reshape(d, -1)
+
+
+def col2im(y: jnp.ndarray, oh: int, ow: int) -> jnp.ndarray:
+    """GEMM output [N, OH*OW, D] -> feature map [N, OH, OW, D]."""
+    n, _, d = y.shape
+    return y.reshape(n, oh, ow, d)

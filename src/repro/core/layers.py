@@ -1,0 +1,210 @@
+"""Functional Bit layers: the paper's kernel as a composable module.
+
+Everything is functional (params are plain pytrees) so the layers nest
+into pjit'd programs without a framework dependency. Three execution
+modes per layer (``QuantMode``): FLOAT control group, FAKE_QUANT
+training with STE, PACKED 1-bit inference.
+
+The PACKED path has two engines:
+  * ``engine="xnor"``   — paper-faithful Pallas xnor-popcount kernel
+                          (activations binarized + packed on the fly),
+  * ``engine="unpack"`` — TPU-native MXU kernel, weight-only packing,
+  * ``engine="xla"``    — pure-XLA unpack+dot with packed storage; the
+                          only engine usable inside large SPMD programs
+                          on this CPU container (HLO still reflects
+                          int32 weight traffic, which the roofline reads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.binarize import QuantMode, binarize_activations, binarize_weights
+from repro.core.im2col import col2im, filters_to_matrix, im2col
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class BitLinearConfig:
+    mode: QuantMode = QuantMode.FAKE_QUANT
+    binarize_acts: bool = True          # False => weight-only (LM serving)
+    use_scale: bool = False             # XNOR-Net alpha (beyond-paper)
+    engine: str = "xla"                 # "xnor" | "unpack" | "xla"
+    compute_dtype: object = jnp.float32
+
+
+def init_linear(key, in_features: int, out_features: int, *, bias: bool = True,
+                dtype=jnp.float32) -> dict:
+    std = (2.0 / in_features) ** 0.5
+    p = {"w": jax.random.normal(key, (out_features, in_features), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((out_features,), dtype)
+    return p
+
+
+def pack_linear_params(params: dict, *, use_scale: bool = False) -> dict:
+    """Latent float params -> packed inference params (paper §3.1)."""
+    w = params["w"]  # [out, in] (or stacked [..., out, in] for MoE experts)
+    k = w.shape[-1]
+    pad = -k % bitops.PACK_BITS
+    widths = [(0, 0)] * (w.ndim - 1) + [(0, pad)]
+    wm = jnp.pad(w, widths, constant_values=-1.0) if pad else w
+    packed = {"w_packed": bitops.pack_bits(wm, axis=-1)}
+    if use_scale:
+        packed["alpha"] = jnp.mean(jnp.abs(w), axis=-1)  # [out]
+    if "b" in params:
+        packed["b"] = params["b"]
+    return packed
+
+
+def _packed_matmul(wp, x2d, k_orig, cfg: BitLinearConfig):
+    """x2d: [B, K_orig] real, wp: [out, K_pad/32]. Returns [B, out] float.
+
+    When K_orig isn't a multiple of 32 the packed weights carry
+    ``n_pad = K_pad - K_orig`` trailing -1 bits. The xnor engine pads the
+    activations with +1 there (each padded position then contributes
+    exactly -1 to the ±1 dot product) and adds ``n_pad`` back — an exact
+    correction. The unpack engines pad activations with 0 instead, which
+    contributes nothing.
+    """
+    k_pad = wp.shape[1] * bitops.PACK_BITS
+    n_pad = k_pad - k_orig
+    if cfg.engine == "xnor":
+        # Paper path: binarize + pack activations, xnor-popcount GEMM.
+        xin = jnp.clip(x2d, -1, 1)
+        if n_pad:
+            xin = jnp.pad(xin, ((0, 0), (0, n_pad)), constant_values=1.0)
+        xp = kops.pack_rows(xin.T)                        # [K_pad/32, B]
+        out = kops.xnor_gemm(wp, xp, k_pad)               # [out, B] int32
+        out = out + jnp.int32(n_pad)
+        return out.T.astype(cfg.compute_dtype)
+    # unpack engines: binarize FIRST, then zero-pad — padded positions
+    # must stay exactly 0 so the -1 pad weights contribute nothing.
+    xin = x2d.astype(cfg.compute_dtype)
+    if cfg.binarize_acts:
+        xin = jnp.sign(xin) + (xin == 0).astype(cfg.compute_dtype)
+    if n_pad:
+        xin = jnp.pad(xin, ((0, 0), (0, n_pad)))
+    if cfg.engine == "unpack":
+        return kops.unpack_gemm(wp, xin.T).T.astype(cfg.compute_dtype)
+    # "xla": packed storage, unpack+dot lowered by XLA (SPMD-safe).
+    return bitops.packed_matmul_unpack(
+        wp, xin.T, compute_dtype=cfg.compute_dtype
+    ).T.astype(cfg.compute_dtype)
+
+
+def bit_linear(params: dict, x: jnp.ndarray, cfg: BitLinearConfig) -> jnp.ndarray:
+    """y = x @ W^T (+ b), under the configured quantization mode.
+
+    x: [..., in_features].
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+
+    if cfg.mode == QuantMode.PACKED:
+        wp = params["w_packed"]
+        x2d = x.reshape(-1, k)
+        y = _packed_matmul(wp, x2d, k, cfg)
+        if "alpha" in params:
+            y = y * params["alpha"][None, :].astype(y.dtype)
+        y = y.reshape(*lead, -1)
+    else:
+        w = params["w"]
+        if cfg.mode == QuantMode.FAKE_QUANT:
+            wq, alpha = binarize_weights(
+                w, scale_axis=-1 if cfg.use_scale else None
+            )
+            xq = binarize_activations(x) if cfg.binarize_acts else x
+            y = xq @ wq.astype(x.dtype).T
+            if alpha is not None:
+                y = y * alpha.reshape(1, -1).astype(y.dtype)
+        else:  # FLOAT control group
+            y = x @ w.astype(x.dtype).T
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Convolution — the paper's actual target layer (im2col forward graph, §2).
+# ---------------------------------------------------------------------------
+
+def init_conv(key, kh: int, kw: int, c_in: int, c_out: int, *, bias: bool = True,
+              dtype=jnp.float32) -> dict:
+    fan_in = kh * kw * c_in
+    std = (2.0 / fan_in) ** 0.5
+    p = {"w": jax.random.normal(key, (c_out, kh, kw, c_in), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def pack_conv_params(params: dict, *, use_scale: bool = False) -> dict:
+    """Filters [D, kH, kW, C] -> bitwise matrix [D, kH*kW*C/32] (§3.1:
+    the weight 'manually skips im2col' and is stored packed)."""
+    wm = filters_to_matrix(params["w"])
+    k = wm.shape[1]
+    pad = -k % bitops.PACK_BITS
+    if pad:
+        # -1-valued pad weights; _packed_matmul compensates exactly.
+        wm = jnp.pad(wm, ((0, 0), (0, pad)), constant_values=-1.0)
+    packed = {"w_packed": bitops.pack_bits(wm, axis=-1)}
+    if use_scale:
+        packed["alpha"] = jnp.mean(jnp.abs(wm[:, :k]), axis=-1)
+    if "b" in params:
+        packed["b"] = params["b"]
+    return packed
+
+
+def bit_conv2d(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: BitLinearConfig,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    kh: Optional[int] = None,
+    kw: Optional[int] = None,
+) -> jnp.ndarray:
+    """Conv via the paper's forward graph: im2col -> GEMM -> (+bias) -> col2im.
+
+    x: [N, H, W, C]. Returns [N, OH, OW, D].
+    """
+    if cfg.mode == QuantMode.PACKED:
+        assert kh is not None and kw is not None
+        wp = params["w_packed"]
+    else:
+        w = params["w"]
+        d, kh_, kw_, _ = w.shape
+        kh, kw = kh_, kw_
+
+    patches, (oh, ow) = im2col(x, kh, kw, stride=stride, pad=pad)
+    n = patches.shape[0]
+    pk = patches.shape[-1]
+    x2d = patches.reshape(n * oh * ow, pk)  # [NP, K]
+
+    if cfg.mode == QuantMode.PACKED:
+        y2d = _packed_matmul(wp, x2d, pk, cfg)
+        if "alpha" in params:
+            y2d = y2d * params["alpha"][None, :].astype(y2d.dtype)
+    else:
+        wm = filters_to_matrix(w)
+        if cfg.mode == QuantMode.FAKE_QUANT:
+            wq, alpha = binarize_weights(
+                wm, scale_axis=-1 if cfg.use_scale else None
+            )
+            xq = binarize_activations(x2d) if cfg.binarize_acts else x2d
+            y2d = xq @ wq.astype(x2d.dtype).T
+            if alpha is not None:
+                y2d = y2d * alpha.reshape(1, -1).astype(y2d.dtype)
+        else:
+            y2d = x2d @ wm.astype(x2d.dtype).T
+
+    if "b" in params:
+        y2d = y2d + params["b"].astype(y2d.dtype)
+    return col2im(y2d.reshape(n, oh * ow, -1), oh, ow)

@@ -1,0 +1,6 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    synthetic_cifar_batches,
+    synthetic_lm_batches,
+    host_shard_slice,
+)

@@ -1,0 +1,104 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle: shape padding to tile multiples (K-padding uses the
+``(w=0, x=~0)`` xnor-neutral trick from ``core.bitops``), dtype checks,
+and backend dispatch — ``interpret=True`` everywhere except a real TPU,
+so the same call sites validate on CPU and run native on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import PACK_BITS, PACKED_DTYPE, pad_packed_operands
+from repro.kernels import pack as pack_kernel
+from repro.kernels import unpack_gemm as unpack_kernel
+from repro.kernels import xnor_gemm as xnor_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def xnor_gemm(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 16,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Padded, dispatching xnor-popcount GEMM. int32 [M, N] output."""
+    if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed operands must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    wp_p, xp_p, m, n = pad_packed_operands(wp, xp, block_m, block_n, block_kw)
+    out = xnor_kernel.xnor_gemm(
+        wp_p, xp_p, k_bits,
+        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def unpack_gemm(
+    wp: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 8,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Packed-weight x real-input GEMM (MXU variant). [M, N] output."""
+    if wp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed weights must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    m, kw = wp.shape
+    k, n = x.shape
+    pm = -m % block_m
+    pn = -n % block_n
+    pkw = -kw % block_kw
+    wp_p = jnp.pad(wp, ((0, pm), (0, pkw))) if (pm or pkw) else wp
+    # zero-padded weight words unpack to -1s; zero-pad x rows so the
+    # padded K region contributes -1 * 0 = 0.
+    x_p = jnp.pad(x, ((0, pkw * PACK_BITS), (0, pn))) if (pkw or pn) else x
+    out = unpack_kernel.unpack_gemm(
+        wp_p, x_p,
+        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def pack_rows(
+    x: jnp.ndarray,
+    *,
+    block_kw: int = 8,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """[K, N] -> [K/32, N] packed. K must be a multiple of 32; N padded."""
+    interpret = _default_interpret() if interpret is None else interpret
+    k, n = x.shape
+    if k % PACK_BITS != 0:
+        raise ValueError(f"K={k} must be a multiple of {PACK_BITS}")
+    kw = k // PACK_BITS
+    bkw = min(block_kw, kw) if kw % min(block_kw, kw) == 0 else 1
+    while kw % bkw:
+        bkw -= 1
+    pn = -n % block_n
+    x_p = jnp.pad(x, ((0, 0), (0, pn))) if pn else x
+    out = pack_kernel.pack_rows(
+        x_p, block_kw=bkw, block_n=block_n, interpret=interpret
+    )
+    return out[:, :n]
+
+
+__all__ = ["xnor_gemm", "unpack_gemm", "pack_rows"]

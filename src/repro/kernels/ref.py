@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.bitops import PACK_BITS, pack_bits, unpack_bits
+
+
+def binary_matmul_ref(w_pm1: jnp.ndarray, x_pm1: jnp.ndarray) -> jnp.ndarray:
+    """Ground truth: ±1 float matmul, int32 result."""
+    return jnp.dot(
+        w_pm1.astype(jnp.float32), x_pm1.astype(jnp.float32)
+    ).astype(jnp.int32)
+
+
+def xnor_gemm_ref(wp: jnp.ndarray, xp: jnp.ndarray, k_bits: int) -> jnp.ndarray:
+    """Paper §3.2 formula, materialized broadcast (test-scale only)."""
+    xnor = ~(wp[:, :, None] ^ xp[None, :, :])
+    pc = lax.population_count(xnor).astype(jnp.int32)
+    return 2 * jnp.sum(pc, axis=1) - jnp.int32(k_bits)
+
+
+def unpack_gemm_ref(wp: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Packed-weight x real-input matmul, fp32 result."""
+    w = unpack_bits(wp, axis=-1, dtype=jnp.float32)
+    return jnp.dot(w, x.astype(jnp.float32))
+
+
+def pack_ref(x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    return pack_bits(x, axis=axis)
+
+
+__all__ = [
+    "PACK_BITS",
+    "binary_matmul_ref",
+    "xnor_gemm_ref",
+    "unpack_gemm_ref",
+    "pack_ref",
+]

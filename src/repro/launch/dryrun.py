@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the two lines above must precede any jax import)
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell against the production mesh, with NO real hardware and NO
+allocation (ShapeDtypeStruct stand-ins end to end).
+
+For each cell this prints/records:
+  * memory_analysis()  — proves the program fits per-device HBM,
+  * cost_analysis()    — per-device FLOPs/bytes for the roofline,
+  * the collective schedule parsed from the compiled HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ASSIGNED,
+    SHAPES,
+    cell_applicable,
+    float_policy,
+    get_config,
+    serve_policy,
+    train_policy,
+)
+from repro.distributed import sharding as shard_rules
+from repro.launch.mesh import MULTI_POD, SINGLE_POD, make_production_mesh
+from repro.models.model_factory import build_model
+from repro.roofline import analysis as roofline
+from repro.train.step import TrainConfig, init_opt_state, make_train_step
+
+
+def _policy_for(kind: str, name: str):
+    if name == "float":
+        return float_policy()
+    if name == "auto":
+        return train_policy() if kind == "train" else serve_policy()
+    if name == "train":
+        return train_policy()
+    return serve_policy()
+
+
+def build_cell(arch: str, shape_name: str, *, policy_name: str = "auto",
+               train_cfg: TrainConfig | None = None,
+               cache_dtype=None):
+    """Returns (step_fn, example_args (SDS), donate, model_flops, meta)."""
+    import jax.numpy as _jnp
+
+    cache_dtype = cache_dtype or _jnp.bfloat16
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    policy = _policy_for(shape.kind, policy_name)
+    model = build_model(cfg, policy)
+
+    key = jax.random.PRNGKey(0)
+    float_params = jax.eval_shape(model.init, key)
+    n_total = roofline.count_params(float_params)
+    frac = (cfg.experts_per_token / cfg.num_experts
+            if cfg.num_experts else None)
+    n_active = roofline.count_params(float_params, active_moe_fraction=frac)
+    model_flops = roofline.model_flops_for(cfg, shape, n_total, n_active)
+    batch = model.input_specs(shape)
+    meta = {"n_params": n_total, "n_active": n_active, "cfg": cfg,
+            "shape": shape}
+
+    if shape.kind == "train":
+        step = make_train_step(model, train_cfg or TrainConfig())
+        opt = jax.eval_shape(init_opt_state, float_params)
+        return step, (float_params, opt, batch), (0, 1), model_flops, meta
+
+    packed = (jax.eval_shape(model.pack, float_params)
+              if model.policy.packed else float_params)
+    state = jax.eval_shape(
+        functools.partial(model.init_state, shape.global_batch,
+                          shape.seq_len, dtype=cache_dtype)
+    )
+    if shape.kind == "prefill":
+        def step(params, st, b):
+            return model.prefill(params, st, b)
+        return step, (packed, state, batch), (1,), model_flops, meta
+
+    def step(params, st, b):
+        return model.decode_step(params, st, b)
+    return step, (packed, state, batch), (1,), model_flops, meta
+
+
+def shardings_for(mesh, args, kind: str):
+    p, s_or_o, batch = args
+    p_sh = shard_rules.params_shardings(mesh, p)
+    b_sh = shard_rules.batch_shardings(mesh, batch)
+    if kind == "train":
+        o_sh = shard_rules.params_shardings(mesh, s_or_o)  # mirrors params
+        # adam count scalar -> replicated
+        return (p_sh, o_sh, b_sh)
+    st_sh = shard_rules.state_shardings(mesh, s_or_o)
+    return (p_sh, st_sh, b_sh)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             policy_name: str = "auto", out_dir: str | None = None,
+             train_cfg: TrainConfig | None = None, verbose: bool = True,
+             tag: str = "", cache_dtype=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "policy": policy_name, "tag": tag}
+    if not ok:
+        result.update(status="skipped", reason=reason)
+        _emit(result, out_dir, verbose)
+        return result
+
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = 512 if multi else 256
+    t0 = time.time()
+    try:
+        step, args, donate, model_flops, _ = build_cell(
+            arch, shape_name, policy_name=policy_name, train_cfg=train_cfg,
+            cache_dtype=cache_dtype,
+        )
+        in_sh = shardings_for(mesh, args, shape.kind)
+        with mesh, shard_rules.activation_mesh(mesh):
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_stats = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_stats[attr] = int(v)
+
+        rf = roofline.from_compiled(
+            compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+            chips=chips, model_flops=model_flops,
+            memory_stats={"temp_bytes": mem_stats.get("temp_size_in_bytes")},
+        )
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory_analysis=mem_stats,
+            roofline=rf.to_dict(),
+        )
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    _emit(result, out_dir, verbose)
+    return result
+
+
+def _emit(result: dict, out_dir: str | None, verbose: bool):
+    if verbose:
+        status = result["status"]
+        line = f"[{status:7s}] {result['arch']:24s} {result['shape']:12s} " \
+               f"{result['mesh']}"
+        if status == "ok":
+            rf = result["roofline"]
+            line += (f"  compute={rf['compute_s']:.4f}s"
+                     f" memory={rf['memory_s']:.4f}s"
+                     f" coll={rf['collective_s']:.4f}s"
+                     f" bottleneck={rf['bottleneck']}"
+                     f" (compile {result['compile_s']}s)")
+        elif status == "skipped":
+            line += f"  ({result['reason']})"
+        else:
+            line += f"  {result['error']}"
+        print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = result.get("tag") or ""
+        suffix = f"_{tag}" if tag else ""
+        fname = (f"{result['arch']}_{result['shape']}_{result['mesh']}"
+                 f"{suffix}.json")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--policy", choices=["auto", "float", "train", "packed"],
+                    default="auto")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for output JSONs")
+    ap.add_argument("--cache-dtype", default="bf16",
+                    choices=["bf16", "int8", "f32"],
+                    help="KV-cache storage dtype (int8 = quantized cache)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    args = ap.parse_args()
+    import jax.numpy as _jnp
+    cache_dtype = {"bf16": _jnp.bfloat16, "int8": _jnp.int8,
+                   "f32": _jnp.float32}[args.cache_dtype]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for mesh_name in meshes:
+        for arch, shape_name in cells:
+            tc = (TrainConfig(microbatches=args.microbatches)
+                  if args.microbatches > 1 else None)
+            r = run_cell(arch, shape_name, mesh_name,
+                         policy_name=args.policy, out_dir=args.out,
+                         tag=args.tag, cache_dtype=cache_dtype,
+                         train_cfg=tc)
+            failures += r["status"] == "error"
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

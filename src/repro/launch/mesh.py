@@ -1,0 +1,38 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (device count is locked at first jax init, and
+smoke tests must see 1 CPU device while the dry-run sees 512 placeholder
+hosts).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+# Both meshes carry the full (pod, data, model) axis-name set so one
+# sharding-rule table serves both; single-pod just has pod=1.
+SINGLE_POD = (1, 16, 16)              # 256 chips
+MULTI_POD = (2, 16, 16)               # 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        # real fleet: ICI-adjacency-aware assignment
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import"
+        )
+    # dry-run: 512 placeholder hosts, single-pod uses the first 256
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)

@@ -1,0 +1,12 @@
+"""Model zoo. ``build_model`` is re-exported lazily to avoid the
+configs<->models import cycle (configs.base needs models.common)."""
+
+from repro.models.common import QuantPolicy  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "build_model":
+        from repro.models.model_factory import build_model
+
+        return build_model
+    raise AttributeError(name)

@@ -1,0 +1,285 @@
+"""GQA attention with RoPE, KV cache, sliding window — quantization-aware.
+
+All four projections (``q_proj/k_proj/v_proj/o_proj``) go through
+:func:`repro.models.common.proj`, so under a PACKED policy they run the
+paper's 1-bit packed-weight contraction (DESIGN.md §4). KV cache layout
+is ``[B, S, Hkv, Dh]`` per layer (stacked ``[L, B, S, Hkv, Dh]`` by the
+model), sharded batch->data and heads/seq->model by the launcher.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, QuantPolicy, apply_rope, init_proj, proj
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "q_proj": init_proj(ks[0], d, cfg.q_dim, bias=cfg.qkv_bias),
+        "k_proj": init_proj(ks[1], d, cfg.kv_dim, bias=cfg.qkv_bias),
+        "v_proj": init_proj(ks[2], d, cfg.kv_dim, bias=cfg.qkv_bias),
+        "o_proj": init_proj(ks[3], cfg.q_dim, d, bias=False),
+    }
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[B, S, Hkv, Dh] -> [B, S, Hkv*groups, Dh] (GQA head expansion).
+
+    Only used by the (test-oracle) dense reference path; the production
+    paths use grouped einsums that never materialize the repeat — the
+    12x-replicated KV read was the dominant decode HBM term
+    (EXPERIMENTS.md §Perf, mistral decode hillclimb)."""
+    if groups == 1:
+        return x
+    b, s, h, dh = x.shape
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, s, h, groups, dh)
+    ).reshape(b, s, h * groups, dh)
+
+
+# Above this many score elements per (q, kv) pair, switch to the
+# flash-style chunked path so [Sq, Skv] score matrices are never
+# materialized (32k prefill would otherwise need TBs of activations).
+_DENSE_SCORE_LIMIT = 2048 * 2048
+
+# int8 KV-cache quantization (beyond-paper bandwidth optimization in the
+# same spirit as the paper's weight packing: decode is KV-read-bound, so
+# halving cache bytes halves the dominant roofline term). Fixed-scale
+# symmetric quantization — RoPE'd keys/values are O(1) by construction.
+_KV_INT8_SCALE = 24.0
+
+
+def _cache_quantize(x, cache_dtype):
+    if cache_dtype == jnp.int8:
+        return jnp.clip(
+            jnp.round(x.astype(jnp.float32) * _KV_INT8_SCALE), -127, 127
+        ).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _cache_dequantize(x, out_dtype):
+    if x.dtype == jnp.int8:
+        return (x.astype(out_dtype) * (1.0 / _KV_INT8_SCALE)).astype(out_dtype)
+    return x.astype(out_dtype)
+
+
+def _mask_for(q_pos, kv_pos, *, causal, sliding_window, kv_valid):
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if sliding_window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - sliding_window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    return mask
+
+
+def _attend_chunked(
+    q, k, v, *, groups, causal, q_positions, kv_positions, kv_valid,
+    sliding_window, q_chunk: int = 512, kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax GQA attention: outer map over query chunks, inner
+    scan over KV chunks carrying (acc, row-max, row-sum). KV stays at
+    kv-head width (grouped einsums — never materialize the GQA repeat);
+    peak live score tensor is [B, Hkv, G, q_chunk, kv_chunk]."""
+    b, sq, h, dh = q.shape
+    hkv = h // groups
+    skv = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    assert sq % qc == 0 and skv % kc == 0, (sq, qc, skv, kc)
+    scale = dh ** -0.5
+    if kv_valid is None:
+        kv_valid = jnp.ones((skv,), bool)
+
+    kb = k.reshape(b, skv // kc, kc, hkv, dh).swapaxes(0, 1)
+    vb = v.reshape(b, skv // kc, kc, hkv, dh).swapaxes(0, 1)
+    kpos_b = kv_positions.reshape(skv // kc, kc)
+    kval_b = kv_valid.reshape(skv // kc, kc)
+
+    def one_q_chunk(args):
+        qi, qpos = args                              # [B, qc, H, Dh], [qc]
+        q5 = qi.reshape(b, qc, hkv, groups, dh)
+
+        # the whole online-softmax inner loop is tile-resident in the
+        # Pallas flash-attention kernel on TPU; the roofline classifies
+        # this scope's traffic as VMEM-fusible (roofline/hlo_cost.py)
+        def kv_step(carry, xs):
+            acc, mx, den = carry
+            kj, vj, kpos, kval = xs
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kj,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask_for(qpos, kpos, causal=causal,
+                            sliding_window=sliding_window, kv_valid=kval)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            mx_new = jnp.maximum(mx, jnp.max(s, -1))
+            corr = jnp.exp(mx - mx_new)
+            p = jnp.exp(s - mx_new[..., None])
+            den_new = den * corr + jnp.sum(p, -1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(qi.dtype), vj
+            ).astype(jnp.float32)
+            return (acc_new, mx_new, den_new), None
+
+        acc0 = jnp.zeros((b, hkv, groups, qc, dh), jnp.float32)
+        mx0 = jnp.full((b, hkv, groups, qc), -jnp.inf, jnp.float32)
+        den0 = jnp.zeros((b, hkv, groups, qc), jnp.float32)
+        with jax.named_scope("vmem_fusible"):
+            (acc, _, den), _ = jax.lax.scan(
+                kv_step, (acc0, mx0, den0), (kb, vb, kpos_b, kval_b)
+            )
+            out = acc / jnp.maximum(den, 1e-30)[..., None]
+        # [B, Hkv, G, qc, Dh] -> [B, qc, H, Dh]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, dh).astype(
+            qi.dtype)
+
+    qb = q.reshape(b, sq // qc, qc, h, dh).swapaxes(0, 1)
+    qpos_b = q_positions.reshape(sq // qc, qc)
+    outs = jax.lax.map(one_q_chunk, (qb, qpos_b))     # [nq, B, qc, H, Dh]
+    return outs.swapaxes(0, 1).reshape(b, sq, h, dh)
+
+
+def _attend(
+    q: jnp.ndarray,           # [B, Sq, H, Dh]
+    k: jnp.ndarray,           # [B, Skv, Hkv, Dh]  (kv-head width!)
+    v: jnp.ndarray,           # [B, Skv, Hkv, Dh]
+    *,
+    groups: int = 1,          # H / Hkv
+    causal: bool,
+    q_positions: jnp.ndarray,     # [Sq] absolute positions of the queries
+    kv_positions: jnp.ndarray,    # [Skv]
+    kv_valid: Optional[jnp.ndarray] = None,   # [Skv] bool (cache fill mask)
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    hkv = h // groups
+    if sq * k.shape[1] > _DENSE_SCORE_LIMIT:
+        if (
+            jax.default_backend() == "tpu"
+            and causal and not sliding_window and kv_valid is None
+            and sq == k.shape[1]
+        ):
+            # native path: Pallas flash-attention kernel (VMEM tiles)
+            from repro.kernels.flash_attention import flash_attention
+
+            fq = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+            fk = _repeat_kv(k, groups).transpose(0, 2, 1, 3).reshape(
+                b * h, sq, dh)
+            fv = _repeat_kv(v, groups).transpose(0, 2, 1, 3).reshape(
+                b * h, sq, dh)
+            out = flash_attention(fq, fk, fv, causal=True)
+            return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+        return _attend_chunked(
+            q, k, v, groups=groups, causal=causal, q_positions=q_positions,
+            kv_positions=kv_positions, kv_valid=kv_valid,
+            sliding_window=sliding_window,
+        )
+    # dense path — grouped einsums, the GQA repeat is never materialized
+    q5 = q.reshape(b, sq, hkv, groups, dh)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q5, k, preferred_element_type=jnp.float32
+    ) * (dh ** -0.5)
+
+    mask = jnp.ones(scores.shape[-2:], bool)
+    if causal:
+        mask &= kv_positions[None, :] <= q_positions[:, None]
+    if sliding_window:
+        mask &= kv_positions[None, :] > q_positions[:, None] - sliding_window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def attention(
+    params: Params,
+    x: jnp.ndarray,                     # [B, S, D]
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    *,
+    positions: jnp.ndarray,             # [S] absolute positions
+    cache: Optional[dict] = None,       # {"k","v": [B, Smax, Hkv, Dh], "index": int}
+    causal: bool = True,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """Returns (output [B, S, D], updated cache)."""
+    b, s, _ = x.shape
+    q = proj(params["q_proj"], x, policy).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = proj(params["k_proj"], x, policy).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = proj(params["v_proj"], x, policy).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], _cache_quantize(k, cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], _cache_quantize(v, cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+        smax = ck.shape[1]
+        kv_positions = jnp.arange(smax)
+        kv_valid = kv_positions < idx + s
+        k_full = _cache_dequantize(ck, q.dtype)
+        v_full = _cache_dequantize(cv, q.dtype)
+    else:
+        kv_positions = positions
+        kv_valid = None
+        k_full, v_full = k, v
+
+    out = _attend(
+        q, k_full, v_full,
+        groups=cfg.num_heads // cfg.num_kv_heads,
+        causal=causal,
+        q_positions=positions,
+        kv_positions=kv_positions,
+        kv_valid=kv_valid,
+        sliding_window=cfg.sliding_window,
+    )
+    out = out.reshape(b, s, cfg.q_dim)
+    return proj(params["o_proj"], out, policy), new_cache
+
+
+def cross_attention(
+    params: Params,
+    x: jnp.ndarray,                 # [B, Sq, D] decoder states
+    memory: jnp.ndarray,            # [B, Skv, D] encoder output
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+) -> jnp.ndarray:
+    """Enc-dec cross attention (seamless decoder). No RoPE on cross-keys."""
+    b, sq, _ = x.shape
+    skv = memory.shape[1]
+    q = proj(params["q_proj"], x, policy).reshape(b, sq, cfg.num_heads, cfg.head_dim)
+    k = proj(params["k_proj"], memory, policy).reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    v = proj(params["v_proj"], memory, policy).reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    out = _attend(
+        q, k, v,
+        groups=cfg.num_heads // cfg.num_kv_heads,
+        causal=False,
+        q_positions=jnp.arange(sq),
+        kv_positions=jnp.arange(skv),
+    )
+    return proj(params["o_proj"], out.reshape(b, sq, cfg.q_dim), policy)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, layers: Optional[int] = None,
+               dtype=jnp.bfloat16) -> dict:
+    """Stacked per-layer KV cache. ``index`` is a scalar write cursor."""
+    layers = cfg.num_layers if layers is None else layers
+    shape = (layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }

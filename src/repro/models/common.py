@@ -1,0 +1,154 @@
+"""Shared model components: norms, RoPE, quantization-aware projections.
+
+Projection params are plain dicts ``{"w": [out, in], ("b": [out])}``;
+after :func:`pack_projection_tree` they become ``{"w_packed": int32
+[out, in/32], ("alpha", "b")}`` — the paper's §3.1 encoding applied to
+every matmul in the network. A projection participates in packing iff
+its key ends in ``_proj`` (embeddings, norms, routers, and the LM head
+stay real-valued; see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import QuantMode
+from repro.core.layers import BitLinearConfig, bit_linear, pack_linear_params
+
+Params = dict[str, Any]
+
+PROJ_SUFFIX = "_proj"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """How the paper's technique applies to a whole model."""
+
+    enabled: bool = True
+    mode: QuantMode = QuantMode.FAKE_QUANT   # train: FAKE_QUANT; serve: PACKED
+    binarize_acts: bool = False              # weight-only for LMs
+    use_scale: bool = True                   # XNOR-Net alpha
+    engine: str = "xla"                      # SPMD-safe engine
+
+    def layer_cfg(self) -> BitLinearConfig:
+        return BitLinearConfig(
+            mode=self.mode if self.enabled else QuantMode.FLOAT,
+            binarize_acts=self.binarize_acts,
+            use_scale=self.use_scale,
+            engine=self.engine,
+        )
+
+    @property
+    def packed(self) -> bool:
+        return self.enabled and self.mode == QuantMode.PACKED
+
+
+def init_proj(key, d_in: int, d_out: int, *, bias: bool = False,
+              dtype=jnp.float32) -> Params:
+    std = d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_out, d_in)) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def proj(params: Params, x: jnp.ndarray, policy: QuantPolicy) -> jnp.ndarray:
+    """Quantization-aware y = x @ W^T (+ b)."""
+    return bit_linear(params, x, policy.layer_cfg()).astype(x.dtype)
+
+
+def pack_projection_tree(params, *, use_scale: bool = True):
+    """Recursively replace every ``*_proj`` dict with packed params —
+    turns a trained checkpoint into a 1-bit serving checkpoint."""
+    if isinstance(params, dict):
+        out = {}
+        for k, v in params.items():
+            if (
+                k.endswith(PROJ_SUFFIX)
+                and isinstance(v, dict)
+                and "w" in v
+            ):
+                out[k] = pack_linear_params(v, use_scale=use_scale)
+            else:
+                out[k] = pack_projection_tree(v, use_scale=use_scale)
+        return out
+    if isinstance(params, (list, tuple)):
+        return type(params)(
+            pack_projection_tree(v, use_scale=use_scale) for v in params
+        )
+    return params
+
+
+# ------------------------------- norms --------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (x32 * inv * p["scale"]).astype(dt)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ------------------------------- RoPE ---------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / theta ** (
+        jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- embeddings -----------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) * d**-0.5).astype(dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0).astype(dtype)
+
+
+def logits_from_embedding(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(
+        x.astype(jnp.float32), p["table"].astype(jnp.float32).T
+    )
+
+
+# ------------------------------ losses --------------------------------------
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits [..., V] fp32, labels [...] int. Mean loss."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    return -jnp.mean(ll)

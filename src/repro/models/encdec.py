@@ -1,0 +1,172 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the assignment: ``input_specs`` feeds
+precomputed frame embeddings ``[B, S_enc, D]`` to the encoder. The
+decoder is a standard causal stack with cross-attention into the encoder
+memory; its self-attention KV cache follows the same layout as the
+decoder-only models. LayerNorm (not RMS) per the original architecture.
+
+All projections are binarizable ``*_proj`` modules (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_rules
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models.common import (
+    Params,
+    QuantPolicy,
+    embed,
+    init_embedding,
+    init_layernorm,
+    layernorm,
+    softmax_cross_entropy,
+)
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_layernorm(cfg.d_model),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "norm2": init_layernorm(cfg.d_model),
+        "ffn": ffn_mod.init_dense_ffn(k2, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_layernorm(cfg.d_model),
+        "self_attn": attn_mod.init_attention(k1, cfg),
+        "norm2": init_layernorm(cfg.d_model),
+        "cross_attn": attn_mod.init_attention(k2, cfg),
+        "norm3": init_layernorm(cfg.d_model),
+        "ffn": ffn_mod.init_dense_ffn(k3, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> Params:
+    ke, kd, kemb, khead = jax.random.split(key, 4)
+    enc_layers = jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+        jax.random.split(ke, cfg.encoder_layers)
+    )
+    dec_layers = jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+        jax.random.split(kd, cfg.num_layers)
+    )
+    return {
+        "encoder": {"layers": enc_layers, "final_norm": init_layernorm(cfg.d_model)},
+        "decoder": {"layers": dec_layers, "final_norm": init_layernorm(cfg.d_model)},
+        "embed": init_embedding(kemb, cfg.padded_vocab, cfg.d_model),
+        "lm_head": {
+            "w": (jax.random.normal(khead, (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5)
+        },
+    }
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig,
+           policy: QuantPolicy, *, remat: bool = False) -> jnp.ndarray:
+    """frames: [B, S_enc, D] (audio frontend stub output) -> memory."""
+    s = frames.shape[1]
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        x = shard_rules.constrain_seq(x)
+        h = layernorm(lp["norm1"], x)
+        out, _ = attn_mod.attention(
+            lp["attn"], h, cfg, policy, positions=positions, causal=False
+        )
+        x = x + out
+        h = layernorm(lp["norm2"], x)
+        x = x + ffn_mod.dense_ffn(lp["ffn"], h, policy, cfg.act)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, frames.astype(cfg.dtype), params["encoder"]["layers"])
+    return layernorm(params["encoder"]["final_norm"], x)
+
+
+def decode(params: Params, tokens: jnp.ndarray, memory: jnp.ndarray,
+           cfg: ModelConfig, policy: QuantPolicy, *,
+           state: Optional[dict] = None, remat: bool = False):
+    """tokens [B, S]; memory [B, S_enc, D]. Returns (logits, new_state)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dtype=cfg.dtype)
+    index = state["index"] if state is not None else jnp.zeros((), jnp.int32)
+    positions = index + jnp.arange(s)
+
+    def body(carry, xs):
+        x, = carry
+        x = shard_rules.constrain_seq(x)
+        lp, lstate = xs
+        h = layernorm(lp["norm1"], x)
+        cache = None
+        if lstate is not None:
+            cache = {"k": lstate["k"], "v": lstate["v"], "index": index}
+        out, new_cache = attn_mod.attention(
+            lp["self_attn"], h, cfg, policy, positions=positions, cache=cache
+        )
+        x = x + out
+        h = layernorm(lp["norm2"], x)
+        x = x + attn_mod.cross_attention(lp["cross_attn"], h, memory, cfg, policy)
+        h = layernorm(lp["norm3"], x)
+        x = x + ffn_mod.dense_ffn(lp["ffn"], h, policy, cfg.act)
+        new_state = (None if new_cache is None
+                     else {"k": new_cache["k"], "v": new_cache["v"]})
+        return (x,), new_state
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    if state is None:
+        (x,), _ = lax.scan(
+            lambda c, lp: body(c, (lp, None)), (x,), params["decoder"]["layers"]
+        )
+        new_state = None
+    else:
+        kv = {"k": state["kv"]["k"], "v": state["kv"]["v"]}
+        (x,), ys = lax.scan(body, (x,), (params["decoder"]["layers"], kv))
+        new_state = {"kv": ys, "index": index + s}
+
+    x = layernorm(params["decoder"]["final_norm"], x)
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32),
+        params["lm_head"]["w"].astype(jnp.float32),
+    )
+    logits = shard_rules.constrain(
+        logits, shard_rules.DATA_AXES, None, shard_rules.MODEL_AXIS
+    )
+    return logits, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    c = attn_mod.init_cache(cfg, batch, max_len, layers=cfg.num_layers,
+                            dtype=dtype)
+    return {"kv": {"k": c["k"], "v": c["v"]},
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def encdec_loss(params, batch: dict, cfg: ModelConfig, policy: QuantPolicy,
+                *, remat: bool = True):
+    memory = encode(params, batch["input_embeds"], cfg, policy, remat=remat)
+    logits, _ = decode(params, batch["tokens"], memory, cfg, policy,
+                       remat=remat)
+    loss = softmax_cross_entropy(logits[..., : cfg.vocab_size], batch["labels"])
+    return loss, {"loss": loss}
+
+
+def decode_step(params, cfg: ModelConfig, policy: QuantPolicy, *,
+                state: dict, memory: jnp.ndarray, tokens: jnp.ndarray):
+    logits, state = decode(params, tokens, memory, cfg, policy, state=state)
+    return logits[:, -1, : cfg.vocab_size], state

@@ -1,0 +1,192 @@
+"""FFN blocks: dense (SwiGLU / GeLU) and mixture-of-experts.
+
+MoE is GShard-style top-k with capacity, formulated as a *batched GEMM
+over experts* so it lowers to one fused SPMD region:
+
+  router -> top_k -> (sort-free) capacity assignment via cumsum-of-onehot
+  -> gather tokens into [E, C, D] -> einsum against stacked expert
+  weights [E, ...] -> weighted scatter-add back.
+
+With experts sharded over the 'model' mesh axis and tokens over 'data',
+the gather/scatter lower to the all-to-all dispatch/combine pattern the
+roofline's collective term reads. Dropped tokens (over capacity) pass
+through the residual only — standard GShard semantics.
+
+Every expert / dense matmul is a ``*_proj`` -> binarizable (paper's
+technique applied to the FFN bulk, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_rules
+from repro.models.common import Params, QuantPolicy, init_proj, proj
+
+# --------------------------------- dense ------------------------------------
+
+
+def init_dense_ffn(key, d_model: int, d_ff: int, act: str) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "up_proj": init_proj(ks[0], d_model, d_ff),
+        "down_proj": init_proj(ks[1], d_ff, d_model),
+    }
+    if act == "swiglu":
+        p["gate_proj"] = init_proj(ks[2], d_model, d_ff)
+    return p
+
+
+def dense_ffn(params: Params, x: jnp.ndarray, policy: QuantPolicy, act: str) -> jnp.ndarray:
+    up = proj(params["up_proj"], x, policy)
+    if act == "swiglu":
+        gate = proj(params["gate_proj"], x, policy)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return proj(params["down_proj"], h, policy)
+
+
+# ---------------------------------- MoE -------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p: Params = {
+        # router stays real-valued (DESIGN.md §4: accuracy-critical, tiny)
+        "router": {"w": jax.random.normal(ks[0], (e, d), jnp.float32) * std_in},
+        # stacked expert weights; *_proj suffix => packable per expert row
+        "up_proj": {"w": (jax.random.normal(ks[1], (e, f, d)) * std_in).astype(jnp.float32)},
+        "gate_proj": {"w": (jax.random.normal(ks[2], (e, f, d)) * std_in).astype(jnp.float32)},
+        "down_proj": {"w": (jax.random.normal(ks[3], (e, d, f)) * std_out).astype(jnp.float32)},
+    }
+    return p
+
+
+def _capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * num_tokens * cfg.experts_per_token / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _expert_matmul(w, x, policy: QuantPolicy):
+    """Batched-over-experts contraction. x: [B, E, C, K]; w['w'] or
+    packed ['w_packed'] [E, M, K(/32)]. Returns [B, E, C, M]."""
+    from repro.core import bitops
+    from repro.core.binarize import QuantMode, binarize_weights
+
+    if policy.packed and "w_packed" in w:
+        # unpack happens in VMEM in the Pallas kernel (see bitops note)
+        with jax.named_scope("vmem_fusible"):
+            wv = bitops.unpack_bits(w["w_packed"], axis=-1, dtype=x.dtype)
+            wv = wv[..., : x.shape[-1]]
+            y = jnp.einsum("beck,emk->becm", x, wv,
+                           preferred_element_type=jnp.float32)
+        if "alpha" in w:
+            y = y * w["alpha"][None, :, None, :]
+        return y.astype(x.dtype)
+    wv = w["w"]
+    if policy.enabled and policy.mode == QuantMode.FAKE_QUANT:
+        wq, alpha = binarize_weights(wv, scale_axis=-1 if policy.use_scale else None)
+        y = jnp.einsum("beck,emk->becm", x, wq.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        if alpha is not None:
+            y = y * alpha[..., 0][None, :, None, :].astype(y.dtype)
+        return y.astype(x.dtype)
+    return jnp.einsum("beck,emk->becm", x, wv.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_ffn(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+            policy: QuantPolicy, act: str = "swiglu") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    PER-ROW capacity (GShard group = one sequence): dispatch/combine are
+    local to each batch row, so with B sharded over (pod, data) and
+    experts over model the expert einsum shards over BOTH axes with no
+    partial-sum all-reduce and no redundant compute (§Perf hc7/hc8 —
+    the global-capacity formulation forced either a [E,C,d] all-reduce
+    per layer or 16x duplicated expert FLOPs). Capacity position is
+    computed by sort-based ranking (O(P log P) per row) instead of a
+    cumsum over a [P, E] one-hot (O(P*E) memory).
+
+    Static shapes throughout; capacity overflow drops (residual passes).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = _capacity(cfg, s)                                   # per row
+    p = s * k
+
+    logits = jnp.einsum(
+        "bsd,ed->bse", x.astype(jnp.float32), params["router"]["w"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # [B, S, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    me = jnp.mean(probs, axis=(0, 1))                         # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )
+    aux = e * jnp.sum(me * ce)
+
+    # rank of each (token, slot) pair within its expert, per row:
+    # stable argsort by expert id; rank = sorted position - expert start
+    flat_e = expert_idx.reshape(b, p)                          # [B, P]
+    sort_idx = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left")
+    )(sorted_e)                                                # [B, E]
+    rank_sorted = jnp.arange(p)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1
+    )
+    pos_in_e = jnp.zeros((b, p), jnp.int32).at[
+        jnp.arange(b)[:, None], sort_idx
+    ].set(rank_sorted.astype(jnp.int32))
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, flat_e * cap + pos_in_e, e * cap)   # [B, P]
+
+    # dispatch (row-local): [B, S, D] pairs -> [B, E, C, D]
+    rows = jnp.arange(b)[:, None]
+    token_of_pair = jnp.repeat(jnp.arange(s), k)[None, :]      # [1, P]
+    x_pairs = jnp.take_along_axis(
+        x, jnp.broadcast_to(token_of_pair[..., None], (b, p, 1)), axis=1
+    )                                                          # [B, P, D]
+    # Sharding note (§Perf hc8-hc10): the dispatch scatter is left
+    # UNPINNED. Explicitly pinning xe to (B:data, E:model) makes XLA
+    # all-reduce the whole dispatch buffer (522s collective term);
+    # pinning the buffer to data + slicing at xe makes the backward
+    # pass pathological (714s). Unpinned, XLA replicates the (cheap,
+    # bandwidth-light) expert einsum over the data axis — redundant
+    # FLOPs, but compute is 80x away from the bottleneck and the
+    # collective term drops 126s -> 73s. Chosen on measurement.
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype).at[rows, slot].set(
+        x_pairs, mode="drop"
+    )
+    xe = buf[:, : e * cap].reshape(b, e, cap, d)
+
+    # expert computation (batched GEMM — all binarizable projections)
+    up = _expert_matmul(params["up_proj"], xe, policy)
+    if act == "swiglu":
+        gate = _expert_matmul(params["gate_proj"], xe, policy)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    ye = _expert_matmul(params["down_proj"], h, policy)        # [B, E, C, D]
+
+    # combine (row-local): gather pair outputs, weight by gate, sum over k
+    ye_flat = jnp.concatenate(
+        [ye.reshape(b, e * cap, d), jnp.zeros((b, 1, d), ye.dtype)], axis=1
+    )
+    pair_out = jnp.take_along_axis(
+        ye_flat, jnp.broadcast_to(slot[..., None], (b, p, 1)), axis=1
+    )                                                          # [B, P, D]
+    gates = (gate_vals.reshape(b, p) * keep).astype(pair_out.dtype)
+    out = jnp.sum((pair_out * gates[..., None]).reshape(b, s, k, d), axis=2)
+    return out, aux

@@ -1,0 +1,156 @@
+"""Mamba (S6 selective SSM) block — the non-attention layer of jamba.
+
+Chunked selective scan: ``lax.scan`` over sequence chunks carrying the
+recurrent state ``[B, d_inner, d_state]``; inside a chunk the recurrence
+runs as an associative scan. This bounds the materialized state tensor
+to ``[B, chunk, d_inner, d_state]`` (the naive full-sequence associative
+scan would be ~1 TB for jamba's train_4k cell) while keeping the
+parallel-scan FLOPs profile.
+
+Projections (``in_proj/x_proj/dt_proj/out_proj``) are binarizable; the
+SSM dynamics params (A_log, D, conv) stay real — they are tiny and
+numerically sensitive (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, QuantPolicy, init_proj, proj
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": init_proj(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, di)) * 0.1,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": init_proj(ks[2], di, r + 2 * ds),
+        "dt_proj": init_proj(ks[3], r, di, bias=True),
+        "out_proj": init_proj(ks[4], di, d),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: [B, S, di]; w: [K, di].
+
+    Returns (y, new_state) where state is the last K-1 inputs
+    ([B, K-1, di]) for streaming decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        hist = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        hist[:, i : i + x.shape[1], :] * w[i] for i in range(k)
+    ) + b
+    new_state = hist[:, -(k - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
+def _selective_scan_chunk(carry, xs):
+    """Associative scan within one chunk; carry: h [B, di, ds].
+
+    Emits the chunk's *outputs* y = C·h (not the states) so the live
+    footprint per step is [B, C, di, ds] and the stacked result is only
+    [B, S, di].
+    """
+    dt, xh, bmat, cmat, a = xs  # [B,C,di], [B,C,di], [B,C,ds], [B,C,ds], [di,ds]
+    if jax.default_backend() == "tpu":
+        # native path: Pallas selective-scan kernel (VMEM-resident state)
+        from repro.kernels.ssm_scan import ssm_scan_chunk
+
+        y, h_last = ssm_scan_chunk(dt, xh, bmat, cmat, a, carry)
+        return h_last, y
+    # XLA fallback: associative scan; its [B, C, di, ds] state tensor is
+    # tile-resident in the kernel above (see roofline/hlo_cost.py)
+    with jax.named_scope("vmem_fusible"):
+        da = jnp.exp(dt[..., None] * a)                   # [B, C, di, ds]
+        dbx = (dt * xh)[..., None] * bmat[:, :, None, :]
+
+        def combine(u, v):
+            (a1, b1), (a2, b2) = u, v
+            return a1 * a2, b1 * a2 + b2
+
+        da_s, dbx_s = lax.associative_scan(combine, (da, dbx), axis=1)
+        h = carry[:, None] * da_s + dbx_s      # [B, C, di, ds]
+        y = jnp.einsum("bcdn,bcn->bcd", h, cmat)
+    return h[:, -1], y
+
+
+def mamba(params: Params, x: jnp.ndarray, cfg: ModelConfig, policy: QuantPolicy,
+          *, state: Optional[dict] = None, chunk: int = 256
+          ) -> tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B, S, D] -> (y [B, S, D], new streaming state).
+
+    ``state = {"h": [B, di, ds], "conv": [B, K-1, di]}`` for decode.
+    """
+    b, s, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = proj(params["in_proj"], x, policy)
+    xh, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xh, new_conv = _causal_conv(xh, params["conv_w"], params["conv_b"], conv_state)
+    xh = jax.nn.silu(xh)
+
+    bcdt = proj(params["x_proj"], xh, policy).astype(jnp.float32)
+    r = _dt_rank(cfg)
+    dt_in, bmat, cmat = jnp.split(bcdt, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(
+        proj(params["dt_proj"], dt_in.astype(x.dtype), policy).astype(jnp.float32)
+    )                                               # [B, S, di]
+    a = -jnp.exp(params["A_log"])                   # [di, ds]
+    xh32 = xh.astype(jnp.float32)
+
+    h0 = (state["h"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, di, ds), jnp.float32))
+
+    if s == 1:  # decode fast path: one recurrence step
+        da = jnp.exp(dt[:, 0, :, None] * a)
+        dbx = (dt[:, 0] * xh32[:, 0])[..., None] * bmat[:, 0, None, :]
+        h_last = h0 * da + dbx
+        y = jnp.einsum("bdn,bn->bd", h_last, cmat[:, 0])[:, None]
+    else:
+        c = min(chunk, s)
+        assert s % c == 0, (s, c)
+
+        def chunked(t, width):
+            return t.reshape(b, s // c, c, width).swapaxes(0, 1)
+
+        xs = (chunked(dt, di), chunked(xh32, di),
+              chunked(bmat, ds), chunked(cmat, ds),
+              jnp.broadcast_to(a, (s // c, di, ds)))
+        h_last, ys = lax.scan(_selective_scan_chunk, h0, xs)
+        y = ys.swapaxes(0, 1).reshape(b, s, di)
+
+    y = y + xh.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = proj(params["out_proj"], y, policy)
+
+    new_state = {"h": h_last, "conv": new_conv} if state is not None else None
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, *, layers: int) -> dict:
+    return {
+        "h": jnp.zeros((layers, batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((layers, batch, cfg.conv_width - 1, cfg.d_inner),
+                          jnp.float32),
+    }

@@ -1,0 +1,142 @@
+"""Unified model API: ``build_model(cfg)`` -> a ``Model`` bundle of
+pure functions (init / loss / prefill / decode_step / init_state /
+input_specs). The launcher, dry-run, trainer, server, benchmarks, and
+tests all go through this one entry point, so every architecture is
+selectable with ``--arch <id>`` and every step function has a single
+canonical signature:
+
+  loss(params, batch)                 -> (scalar, metrics)    [train]
+  prefill(params, state, batch)       -> (last_logits, state) [inference]
+  decode_step(params, state, batch)   -> (logits, state)      [inference]
+
+``input_specs(shape)`` returns ShapeDtypeStruct stand-ins for every
+input (weak-type-correct, shardable, no allocation) — the multi-pod
+dry-run lowers against exactly these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import QuantPolicy, pack_projection_tree
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    policy: QuantPolicy
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, dict], tuple[jnp.ndarray, dict]]
+    prefill: Callable[[Params, dict, dict], tuple[jnp.ndarray, dict]]
+    decode_step: Callable[[Params, dict, dict], tuple[jnp.ndarray, dict]]
+    init_state: Callable[..., dict]
+    input_specs: Callable[[ShapeConfig], dict]
+
+    def pack(self, params: Params) -> Params:
+        """Trained float params -> 1-bit packed serving params (§3.1)."""
+        return pack_projection_tree(params, use_scale=self.policy.use_scale)
+
+
+def _lm_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        if cfg.input_kind == "embeddings":
+            return {
+                "input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        if cfg.input_kind == "embeddings":
+            return {"input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def _encdec_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {
+            "input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "memory": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype),
+    }
+
+
+def build_model(cfg: ModelConfig, policy: QuantPolicy) -> Model:
+    if cfg.family == "encdec":
+        def loss(params, batch):
+            return encdec_mod.encdec_loss(params, batch, cfg, policy)
+
+        def prefill(params, state, batch):
+            memory = encdec_mod.encode(params, batch["input_embeds"], cfg, policy)
+            logits, state = encdec_mod.decode(
+                params, batch["tokens"], memory, cfg, policy, state=state
+            )
+            return logits[:, -1, : cfg.vocab_size], dict(state, memory=memory)
+
+        def decode_step(params, state, batch):
+            memory = state.get("memory", batch.get("memory"))
+            st = {"kv": state["kv"], "index": state["index"]}
+            logits, st = encdec_mod.decode(
+                params, batch["tokens"], memory, cfg, policy, state=st
+            )
+            out = dict(st)
+            if "memory" in state:
+                out["memory"] = memory
+            return logits[:, -1, : cfg.vocab_size], out
+
+        return Model(
+            cfg=cfg, policy=policy,
+            init=lambda key: encdec_mod.init_encdec_params(key, cfg),
+            loss=loss, prefill=prefill, decode_step=decode_step,
+            init_state=functools.partial(encdec_mod.init_state, cfg),
+            input_specs=functools.partial(_encdec_input_specs, cfg),
+        )
+
+    def loss(params, batch):
+        return tf_mod.lm_loss(params, batch, cfg, policy)
+
+    def prefill(params, state, batch):
+        return tf_mod.prefill(
+            params, cfg, policy, state=state,
+            tokens=batch.get("tokens"), input_embeds=batch.get("input_embeds"),
+        )
+
+    def decode_step(params, state, batch):
+        return tf_mod.decode_step(
+            params, cfg, policy, state=state, tokens=batch["tokens"]
+        )
+
+    return Model(
+        cfg=cfg, policy=policy,
+        init=lambda key: tf_mod.init_lm_params(key, cfg),
+        loss=loss, prefill=prefill, decode_step=decode_step,
+        init_state=functools.partial(tf_mod.init_state, cfg),
+        input_specs=functools.partial(_lm_input_specs, cfg),
+    )

@@ -1,0 +1,409 @@
+"""Decoder-only LM assembly for all assigned architectures.
+
+Layer stacks are *periodic*: each arch defines a short repeating pattern
+of (mixer, ffn) layer kinds (dense: 1-layer period; jamba: 8-layer
+period of 7 mamba + 1 attention with MoE every other layer; xlstm:
+1 sLSTM + 7 mLSTM; ...). Parameters are stacked per period and the
+forward pass is ``lax.scan`` over periods — so the compiled HLO contains
+ONE period body regardless of depth (72-layer jamba compiles the same
+8-layer body 9x cheaper), which is what makes the 512-device dry-run
+tractable and keeps roofline terms per-layer x L.
+
+Streaming state (KV cache / SSM state / xLSTM cells) is stacked with a
+leading per-kind layer axis, reshaped to [periods, per_period, ...] and
+threaded through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_rules
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (
+    Params,
+    QuantPolicy,
+    embed,
+    init_embedding,
+    init_proj,
+    init_rmsnorm,
+    layernorm,
+    init_layernorm,
+    rmsnorm,
+    softmax_cross_entropy,
+)
+
+# ------------------------------ period spec ----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str        # attn | mamba | mlstm | slstm
+    ffn: str          # dense | moe | moe+dense | none
+
+
+def period_spec(cfg: ModelConfig) -> list[LayerKind]:
+    if cfg.family == "hybrid":
+        period = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if cfg.is_attention_layer(i) else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(i) else "dense"
+            period.append(LayerKind(mixer, ffn))
+        return period
+    if cfg.family == "ssm":
+        return [
+            LayerKind("slstm" if cfg.is_slstm_layer(i) else "mlstm", "none")
+            for i in range(cfg.slstm_every)
+        ]
+    ffn = "moe" if cfg.num_experts else "dense"
+    if cfg.dense_residual_ff:
+        ffn = "moe+dense"
+    return [LayerKind("attn", ffn)]
+
+
+def num_periods(cfg: ModelConfig) -> int:
+    p = len(period_spec(cfg))
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ------------------------------ layer init -----------------------------------
+
+
+def _norm_fns(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return init_layernorm, layernorm
+    return init_rmsnorm, rmsnorm
+
+
+def _init_layer(key, cfg: ModelConfig, kind: LayerKind) -> Params:
+    init_norm, _ = _norm_fns(cfg)
+    keys = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg.d_model)}
+    if kind.mixer == "attn":
+        p["attn"] = attn_mod.init_attention(keys[0], cfg)
+    elif kind.mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(keys[0], cfg)
+    elif kind.mixer == "mlstm":
+        p["mlstm"] = xlstm_mod.init_mlstm(keys[0], cfg)
+    elif kind.mixer == "slstm":
+        p["slstm"] = xlstm_mod.init_slstm(keys[0], cfg)
+    if kind.ffn != "none":
+        p["norm2"] = init_norm(cfg.d_model)
+        if "moe" in kind.ffn:
+            p["moe"] = ffn_mod.init_moe(keys[1], cfg)
+        if kind.ffn == "dense" or kind.ffn == "moe+dense":
+            width = cfg.dense_residual_ff or cfg.d_ff
+            p["ffn"] = ffn_mod.init_dense_ffn(keys[2], cfg.d_model, width, cfg.act)
+    return p
+
+
+def init_lm_params(key, cfg: ModelConfig) -> Params:
+    period = period_spec(cfg)
+    np_ = num_periods(cfg)
+    init_norm, _ = _norm_fns(cfg)
+    kemb, khead, kstack = jax.random.split(key, 3)
+
+    def init_period(k):
+        ks = jax.random.split(k, len(period))
+        return [
+            _init_layer(ks[i], cfg, kind) for i, kind in enumerate(period)
+        ]
+
+    stacked = jax.vmap(init_period)(jax.random.split(kstack, np_))
+    params: Params = {
+        "layers": stacked,
+        "final_norm": init_norm(cfg.d_model),
+    }
+    if cfg.input_kind == "tokens":
+        params["embed"] = init_embedding(kemb, cfg.padded_vocab, cfg.d_model)
+    else:
+        # modality stub: inputs are precomputed frame/patch embeddings
+        params["in_norm"] = init_norm(cfg.d_model)
+        params["embed"] = init_embedding(kemb, cfg.padded_vocab, cfg.d_model)
+    if not cfg.tie_embeddings:
+        # LM head stays real-valued (DESIGN.md §4) — plain param, not *_proj
+        params["lm_head"] = {
+            "w": (jax.random.normal(khead, (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5)
+        }
+    return params
+
+
+# ------------------------------ streaming state -------------------------------
+
+
+def _kind_counts(cfg: ModelConfig) -> dict[str, int]:
+    period = period_spec(cfg)
+    np_ = num_periods(cfg)
+    out: dict[str, int] = {}
+    for k in period:
+        out[k.mixer] = out.get(k.mixer, 0) + np_
+    return out
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """All streaming state for decode: per-mixer-kind stacked arrays."""
+    counts = _kind_counts(cfg)
+    st: dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    if "attn" in counts:
+        c = attn_mod.init_cache(cfg, batch, max_len, layers=counts["attn"],
+                                dtype=dtype)
+        st["kv"] = {"k": c["k"], "v": c["v"]}
+    if "mamba" in counts:
+        st["mamba"] = mamba_mod.init_mamba_state(cfg, batch, layers=counts["mamba"])
+    if "mlstm" in counts:
+        st["mlstm"] = xlstm_mod.init_mlstm_state(cfg, batch, layers=counts["mlstm"])
+    if "slstm" in counts:
+        st["slstm"] = xlstm_mod.init_slstm_state(cfg, batch, layers=counts["slstm"])
+    return st
+
+
+# Streaming state is threaded through the scan as xs (per-period slices
+# in) / ys (updated slices out): scan's own stacking machinery double-
+# buffers them with clean aliasing. The carry-held alternative (full
+# stack in the carry + dynamic-index read / dynamic-update write) was
+# tried and REFUTED: XLA copy-insertion cannot prove the in-iteration
+# read and write of the same buffer don't conflict and inserts two full
+# cache-stack copies per layer (2x520 GB/step for mistral decode_32k —
+# EXPERIMENTS.md §Perf, hc2).
+
+
+def _split_state_for_scan(cfg: ModelConfig, st: Optional[dict]):
+    """[L_kind, ...] arrays -> [periods, per_period_kind, ...] scan xs."""
+    if st is None:
+        return None
+    np_ = num_periods(cfg)
+
+    def resh(t):
+        return t.reshape(np_, t.shape[0] // np_, *t.shape[1:])
+
+    out = {}
+    for k, v in st.items():
+        if k == "index":
+            continue
+        out[k] = jax.tree.map(resh, v)
+    return out
+
+
+def _merge_state_from_scan(st: dict, ys: dict, new_index) -> dict:
+    def unresh(t):
+        return t.reshape(t.shape[0] * t.shape[1], *t.shape[2:])
+
+    out = {"index": new_index}
+    for k, v in ys.items():
+        out[k] = jax.tree.map(unresh, v)
+    return out
+
+
+# ------------------------------ forward --------------------------------------
+
+
+def _apply_layer(x, lp: Params, cfg: ModelConfig, policy: QuantPolicy,
+                 kind: LayerKind, *, positions, layer_state, causal=True):
+    """One residual block. Returns (x, new_layer_state, aux_loss)."""
+    _, norm = _norm_fns(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(lp["norm1"], x)
+    new_state = layer_state
+    if kind.mixer == "attn":
+        cache = None
+        if layer_state is not None:
+            cache = {"k": layer_state["k"], "v": layer_state["v"],
+                     "index": layer_state["index"]}
+        out, new_cache = attn_mod.attention(
+            lp["attn"], h, cfg, policy, positions=positions, cache=cache,
+            causal=causal,
+        )
+        if new_cache is not None:
+            new_state = {"k": new_cache["k"], "v": new_cache["v"],
+                         "index": layer_state["index"]}
+    elif kind.mixer == "mamba":
+        out, new_state = mamba_mod.mamba(lp["mamba"], h, cfg, policy,
+                                         state=layer_state)
+    elif kind.mixer == "mlstm":
+        out, new_state = xlstm_mod.mlstm_block(lp["mlstm"], h, cfg, policy,
+                                               state=layer_state)
+    elif kind.mixer == "slstm":
+        out, new_state = xlstm_mod.slstm_block(lp["slstm"], h, cfg, policy,
+                                               state=layer_state)
+    else:
+        raise ValueError(kind.mixer)
+    # name the POST-collective block outputs: the remat policy saves
+    # exactly these, so the backward pass neither re-runs the forward
+    # all-reduces nor stashes every wide dot output (§Perf, mistral
+    # train hillclimb)
+    out = checkpoint_name(out, "mixer_out")
+    x = x + out
+
+    if kind.ffn != "none":
+        h = norm(lp["norm2"], x)
+        y = jnp.zeros_like(x)
+        if "moe" in kind.ffn:
+            mo, aux = ffn_mod.moe_ffn(lp["moe"], h, cfg, policy, cfg.act)
+            y = y + mo
+        if kind.ffn in ("dense", "moe+dense"):
+            y = y + ffn_mod.dense_ffn(lp["ffn"], h, policy, cfg.act)
+        y = checkpoint_name(y, "ffn_out")
+        x = x + y
+    return x, new_state, aux
+
+
+def _kind_per_period(cfg: ModelConfig) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for k in period_spec(cfg):
+        out[k.mixer] = out.get(k.mixer, 0) + 1
+    return out
+
+
+def _period_fn(cfg: ModelConfig, policy: QuantPolicy, *, causal=True,
+               remat=False):
+    period = period_spec(cfg)
+    per_period = _kind_per_period(cfg)
+
+    def body(carry, xs):
+        x, positions, index = carry
+        x = shard_rules.constrain_seq(x)   # residual layout (no-op w/o mesh)
+        pparams, pstate = xs
+        new_states: dict[str, list] = {}
+        kind_cursor: dict[str, int] = {}
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(period):
+            lstate = None
+            key = "kv" if kind.mixer == "attn" else kind.mixer
+            if pstate is not None and key in pstate:
+                j = kind_cursor.get(kind.mixer, 0)
+                kind_cursor[kind.mixer] = j + 1
+                lstate = jax.tree.map(lambda t: t[j], pstate[key])
+                if kind.mixer == "attn":
+                    lstate = dict(lstate, index=index)
+            x, lstate_new, aux = _apply_layer(
+                x, pparams[i], cfg, policy, kind,
+                positions=positions, layer_state=lstate, causal=causal,
+            )
+            aux_total = aux_total + aux
+            if lstate_new is not None:
+                if kind.mixer == "attn":
+                    lstate_new = {"k": lstate_new["k"], "v": lstate_new["v"]}
+                new_states.setdefault(key, []).append(lstate_new)
+        ys_state = {
+            k: jax.tree.map(lambda *ts: jnp.stack(ts), *v)
+            for k, v in new_states.items()
+        }
+        return (x, positions, index), (ys_state, aux_total)
+
+    if remat:
+        # dots-saveable beats save-only-block-outputs: saving the post-
+        # collective block outputs did NOT remove the backward AR replay
+        # (the mixer's internals are recomputed anyway) and cost +19%
+        # compute (§Perf hc5, refuted); activation CAPACITY is handled
+        # by microbatching instead.
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return body
+
+
+def lm_forward(
+    params: Params,
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    *,
+    tokens: Optional[jnp.ndarray] = None,        # [B, S] int32
+    input_embeds: Optional[jnp.ndarray] = None,  # [B, S, D] (vlm/audio stub)
+    state: Optional[dict] = None,                # streaming state (decode)
+    remat: bool = False,
+    causal: bool = True,
+    logits_last_only: bool = False,              # prefill: skip S-1 logits
+) -> tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (logits [B, S, V], new_state, aux_loss)."""
+    _, norm = _norm_fns(cfg)
+    if input_embeds is not None:
+        x = norm(params["in_norm"], input_embeds.astype(cfg.dtype)) \
+            if "in_norm" in params else input_embeds.astype(cfg.dtype)
+        s = input_embeds.shape[1]
+    else:
+        x = embed(params["embed"], tokens, dtype=cfg.dtype)
+        s = tokens.shape[1]
+
+    index = state["index"] if state is not None else jnp.zeros((), jnp.int32)
+    positions = index + jnp.arange(s)
+
+    body = _period_fn(cfg, policy, causal=causal, remat=remat)
+    np_ = num_periods(cfg)
+    xs_state = _split_state_for_scan(cfg, state)
+    if xs_state is None:
+        def no_state_body(c, p):
+            c, (_, aux) = body(c, (p, None))
+            return c, (None, aux)
+
+        (x, _, _), (_, auxs) = lax.scan(
+            no_state_body, (x, positions, index), params["layers"],
+            length=np_,
+        )
+        new_state = None
+    else:
+        (x, _, _), (ys_state, auxs) = lax.scan(
+            body, (x, positions, index), (params["layers"], xs_state),
+            length=np_,
+        )
+        new_state = _merge_state_from_scan(state, ys_state, index + s)
+
+    if logits_last_only:
+        x = x[:, -1:]
+    x = norm(params["final_norm"], x)
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32), head.astype(jnp.float32)
+    )
+    logits = shard_rules.constrain(
+        logits, shard_rules.DATA_AXES, None, shard_rules.MODEL_AXIS
+    )
+    return logits, new_state, jnp.sum(auxs)
+
+
+# ------------------------------ entry points ---------------------------------
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, policy: QuantPolicy,
+            *, remat: bool = True, aux_weight: float = 0.01):
+    logits, _, aux = lm_forward(
+        params, cfg, policy,
+        tokens=batch.get("tokens"),
+        input_embeds=batch.get("input_embeds"),
+        remat=remat,
+    )
+    loss = softmax_cross_entropy(logits[..., : cfg.vocab_size], batch["labels"])
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, policy: QuantPolicy, *, state: dict,
+            tokens=None, input_embeds=None):
+    """Fill the cache with a prompt; returns (last-token logits, state)."""
+    logits, state, _ = lm_forward(
+        params, cfg, policy, tokens=tokens, input_embeds=input_embeds,
+        state=state, logits_last_only=True,
+    )
+    return logits[:, -1, : cfg.vocab_size], state
+
+
+def decode_step(params, cfg: ModelConfig, policy: QuantPolicy, *, state: dict,
+                tokens: jnp.ndarray):
+    """One serving step: tokens [B, 1] -> (logits [B, V], new state)."""
+    logits, state, _ = lm_forward(
+        params, cfg, policy, tokens=tokens, state=state,
+    )
+    return logits[:, -1, : cfg.vocab_size], state

@@ -1,0 +1,267 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM is linear attention with a matrix memory ``C [dk, dv]`` and
+*exponential* input gating. Training/prefill run the chunkwise-parallel
+form (intra-chunk quadratic + inter-chunk recurrence, the same shape as
+chunked GLA) so nothing quadratic in the full sequence is materialized;
+decode runs the O(1) recurrence — which is why this arch owns the
+``long_500k`` cell. All exponentials are max-stabilized; the stabilizer
+``m`` is carried across chunks.
+
+sLSTM has scalar memory and a true sequential recurrence (R·h_{t-1});
+it runs as ``lax.scan`` over time with the input-side projections
+hoisted out (those are the binarizable bulk).
+
+Projections (q/k/v/up/down/gates-from-input) are ``*_proj`` ->
+binarizable; recurrent R matrices and norms stay real (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, QuantPolicy, init_proj, proj, rmsnorm
+
+# --------------------------------- mLSTM -------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": init_proj(ks[0], d, 2 * di),
+        "q_proj": init_proj(ks[1], di, di),
+        "k_proj": init_proj(ks[2], di, di),
+        "v_proj": init_proj(ks[3], di, di),
+        "if_proj": init_proj(ks[4], di, 2 * h, bias=True),  # i, f pre-acts
+        "down_proj": init_proj(ks[5], di, d),
+        "gn_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _mlstm_chunk(carry, xs):
+    """One chunk of the stabilized mLSTM recurrence.
+
+    carry: C [B,H,dk,dv], n [B,H,dk], m [B,H]
+    xs: q,k,v [B,L,H,dk|dv], logf/logi [B,L,H]
+    """
+    C, n, m = carry
+    q, k, v, logi, logf = xs
+    # the whole chunk body is tile-resident in the TPU chunked-linear-
+    # attention kernel; the roofline classifies this scope's traffic as
+    # VMEM-fusible (roofline/hlo_cost.py)
+    with jax.named_scope("vmem_fusible"):
+        b_cum = jnp.cumsum(logf, axis=1)               # [B,L,H] inclusive
+        g = logi - b_cum                               # exp-gate in b-units
+        M = lax.cummax(g, axis=1)                      # running max_{j<=t} g_j
+        m_loc = jnp.maximum(M, m[:, None])             # [B,L,H]
+        inter_scale = jnp.exp(m[:, None] - m_loc)      # <= 1
+        # intra-chunk weights: S[t,j] = exp(b_t - b_j + i_j - (b_t + m_loc_t))
+        #                             = exp(g_j - m_loc_t), masked j <= t
+        # index order: [B, t, j, H]
+        w_intra = jnp.exp(g[:, None, :, :] - m_loc[:, :, None, :])
+        lmask = jnp.tril(jnp.ones((q.shape[1], q.shape[1]), bool))
+        w_intra = jnp.where(lmask[None, :, :, None], w_intra, 0.0)
+
+        qk = jnp.einsum("bthd,bjhd->btjh", q, k)       # [B,t,j,H]
+        num_intra = jnp.einsum("btjh,btjh,bjhv->bthv", qk, w_intra, v)
+        den_intra = jnp.einsum("btjh,btjh->bth", qk, w_intra)
+        num_inter = jnp.einsum("bthd,bhdv->bthv", q, C) * inter_scale[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", q, n) * inter_scale
+
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # advance carry to chunk end: new stabilizer m' = b_L + max(M_L, m)
+        bL = b_cum[:, -1]                              # [B,H]
+        m_loc_L = jnp.maximum(M[:, -1], m)
+        m_new = bL + m_loc_L
+        wk = jnp.exp(g - m_loc_L[:, None])             # per-j key weight
+        decay = jnp.exp(m - m_loc_L)                   # [B,H]
+        C_new = decay[..., None, None] * C \
+            + jnp.einsum("bjhd,bjh,bjhv->bhdv", k, wk, v)
+        n_new = decay[..., None] * n + jnp.einsum("bjhd,bjh->bhd", k, wk)
+    return (C_new, n_new, m_new), y
+
+
+def mlstm_cell(q, k, v, logi, logf, state, *, chunk: int = 256):
+    """q,k,v: [B,S,H,dh]; logi/logf: [B,S,H]. Returns (y, new_state)."""
+    b, s, h, dh = q.shape
+    q = q * dh ** -0.5
+    if state is None:
+        C = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n = jnp.zeros((b, h, dh), jnp.float32)
+        m = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C, n, m = state["C"], state["n"], state["m"]
+
+    if s == 1:  # decode recurrence
+        li, lf = logi[:, 0], logf[:, 0]
+        m_new = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * jnp.einsum(
+            "bhd,bhv->bhdv", k[:, 0], v[:, 0]
+        )
+        n = f_s[..., None] * n + i_s[..., None] * k[:, 0]
+        num = jnp.einsum("bhd,bhdv->bhv", q[:, 0], C)
+        den = jnp.einsum("bhd,bhd->bh", q[:, 0], n)
+        y = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None])[:, None]
+        return y, {"C": C, "n": n, "m": m_new}
+
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+
+    if jax.default_backend() == "tpu" and state is None:
+        # native path: Pallas chunkwise kernel (VMEM-resident C/n/m)
+        from repro.kernels.mlstm_chunk import mlstm_chunked
+
+        fq = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh).astype(jnp.float32)
+        fk = k.transpose(0, 2, 1, 3).reshape(b * h, s, dh).astype(jnp.float32)
+        fv = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh).astype(jnp.float32)
+        fi = logi.transpose(0, 2, 1).reshape(b * h, s)
+        ff = logf.transpose(0, 2, 1).reshape(b * h, s)
+        y, Ck, nk, mk = mlstm_chunked(fq, fk, fv, fi, ff, chunk=c)
+        y = y.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+        return y, {
+            "C": Ck.reshape(b, h, dh, dh),
+            "n": nk.reshape(b, h, dh),
+            "m": mk.reshape(b, h),
+        }
+
+    def chunked(t):
+        return t.reshape(b, s // c, c, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(chunked(t) for t in
+               (q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), logi, logf))
+    (C, n, m), ys = lax.scan(_mlstm_chunk, (C, n, m), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dh)
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                policy: QuantPolicy, *, state: Optional[dict] = None,
+                ) -> tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    di = 2 * d
+    dh = di // h
+    xz = proj(params["up_proj"], x, policy)
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    q = proj(params["q_proj"], xm, policy).reshape(b, s, h, dh)
+    k = proj(params["k_proj"], xm, policy).reshape(b, s, h, dh)
+    v = proj(params["v_proj"], xm, policy).reshape(b, s, h, dh)
+    gates = proj(params["if_proj"], xm, policy).astype(jnp.float32)
+    logi, f_pre = jnp.split(gates.reshape(b, s, 2, h), 2, axis=2)
+    logi = logi[:, :, 0]
+    logf = jax.nn.log_sigmoid(f_pre[:, :, 0])
+
+    y, new_state = mlstm_cell(q, k, v, logi, logf, state)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm({"scale": params["gn_scale"]}, y)      # per-cell group norm
+    y = y * jax.nn.silu(z)
+    # training (no streaming state in) must not emit state — the period
+    # scan would stack per-layer C matrices as ys for nothing
+    if state is None:
+        new_state = None
+    return proj(params["down_proj"], y, policy), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, *, layers: int) -> dict:
+    h = cfg.num_heads
+    dh = 2 * cfg.d_model // h
+    return {
+        "C": jnp.zeros((layers, batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((layers, batch, h, dh), jnp.float32),
+        "m": jnp.full((layers, batch, h), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------- sLSTM -------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    dff = int(d * 4 / 3 / 64) * 64 * 2  # gated ffn, proj factor 4/3
+    return {
+        # input-side projections for the 4 gates (binarizable bulk)
+        "gates_proj": init_proj(ks[0], d, 4 * d, bias=True),
+        # recurrent block-diagonal weights per head, per gate (stay real)
+        "R": jax.random.normal(ks[1], (4, h, dh, dh)) * dh ** -0.5,
+        "up_proj": init_proj(ks[2], d, dff),
+        "down_proj": init_proj(ks[3], dff // 2, d),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _slstm_step(carry, xs, *, R, h_heads, dh):
+    hprev, c, n, m = carry            # h: [B,d], c/n: [B,d], m: [B,d]
+    wx = xs                           # [B, 4d] precomputed input projections
+    b = hprev.shape[0]
+    hh = hprev.reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hh, R).reshape(b, 4, h_heads * dh)
+    pre = wx.reshape(b, 4, -1) + rec
+    zi, ii, fi, oi = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    logi = ii
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, logi)
+    i_s = jnp.exp(logi - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_block(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                policy: QuantPolicy, *, state: Optional[dict] = None,
+                ) -> tuple[jnp.ndarray, Optional[dict]]:
+    import functools
+
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = proj(params["gates_proj"], x, policy).astype(jnp.float32)  # [B,S,4d]
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    step = functools.partial(_slstm_step, R=params["R"], h_heads=h, dh=dh)
+    (hT, cT, nT, mT), ys = lax.scan(step, carry, wx.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).astype(x.dtype)                 # [B,S,d]
+    y = rmsnorm({"scale": params["gn_scale"]}, y)
+
+    up = proj(params["up_proj"], y, policy)
+    a, g = jnp.split(up, 2, axis=-1)
+    y = proj(params["down_proj"], a * jax.nn.silu(g), policy)
+    new_state = (None if state is None
+                 else {"h": hT, "c": cT, "n": nT, "m": mT})
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, *, layers: int) -> dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((layers, batch, d), jnp.float32),
+        "c": jnp.zeros((layers, batch, d), jnp.float32),
+        "n": jnp.zeros((layers, batch, d), jnp.float32),
+        "m": jnp.full((layers, batch, d), -1e30, jnp.float32),
+    }

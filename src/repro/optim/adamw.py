@@ -1,0 +1,89 @@
+"""AdamW with BNN-aware extras.
+
+Binarized training detail (BNN, Courbariaux et al.): latent real weights
+are *clipped to [-1, 1]* after each update — outside that range the STE
+gradient is zero and the weight would be stuck forever. ``latent_clip``
+applies this to every param whose pytree path marks it as a binarized
+matrix (callers pass a predicate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    latent_clip: bool = False  # clip binarized latent weights to [-1, 1]
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.zeros_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    cfg: AdamWConfig,
+    *,
+    lr_scale: jnp.ndarray | float = 1.0,
+    clip_predicate: Optional[Callable] = None,
+):
+    """Returns (new_params, new_state). ``lr_scale`` multiplies the base
+    lr (schedule output); ``clip_predicate(path)`` selects latent-clipped
+    binarized weights."""
+    count = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+    c = count.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1**c)
+    nu_hat_scale = 1.0 / (1 - b2**c)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, m, v):
+        step = lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + lr * cfg.weight_decay * p
+        return (p - step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+
+    if cfg.latent_clip:
+        pred = clip_predicate or (lambda path: path and path[-1] == "w")
+        flat = jax.tree_util.tree_flatten_with_path(new_params)
+        leaves, treedef = flat
+        clipped = [
+            jnp.clip(v, -1.0, 1.0)
+            if pred(tuple(_key_str(k) for k in path))
+            else v
+            for path, v in leaves
+        ]
+        new_params = jax.tree_util.tree_unflatten(treedef, clipped)
+
+    return new_params, {"mu": mu, "nu": nu, "count": count}
+
+
+def _key_str(k):
+    if hasattr(k, "key"):
+        return k.key
+    if hasattr(k, "idx"):
+        return k.idx
+    if hasattr(k, "name"):
+        return k.name
+    return str(k)

@@ -1,0 +1,22 @@
+"""LR schedules as pure functions of the step counter."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    step,
+    *,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    min_ratio: float = 0.1,
+):
+    """Linear warmup then cosine decay to ``min_ratio``; returns the lr
+    *multiplier* (compose with the optimizer's base lr)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup_steps)
+    t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,357 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program (every model here) is undercounted by the trip
+count (88x for mistral-large). This walker parses the post-SPMD HLO,
+finds each while's ``known_trip_count`` backend config, and accumulates
+
+  * flops            — 2 * prod(result) * contraction for every dot
+                       (incl. dots inside fusion bodies),
+  * traffic bytes    — operands + outputs of every top-level op, with
+                       fusions counted at their boundary (internals are
+                       register/VMEM-resident post-fusion),
+  * collective bytes — result bytes x wire multiplier (all-reduce 2x
+                       for ring, others 1x) per collective op,
+
+multiplying everything inside a while body by its trip count
+(recursively — chunked-scan-inside-period-scan nests multiply).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLL_MULT = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INST = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME = re.compile(r"\b([a-z][\w\-]*)\(")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_PARAM = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\])(?:\{[^}]*\})?)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {
+    "parameter", "get-tuple-element", "tuple", "constant", "after-all",
+    "bitcast", "partition-id", "replica-id",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class _Inst:
+    name: str
+    op: str
+    result: str            # result type string
+    rhs: str               # full right-hand side (operands + attrs)
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    params: dict           # name -> type string
+    insts: list
+
+
+def _parse_module(text: str) -> dict[str, "_Computation"]:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                params = dict(_PARAM.findall(m.group(2)))
+                cur = _Computation(m.group(1), params, [])
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPNAME.search(rhs)
+        op = om.group(1) if om else ""
+        result = rhs[: om.start()] if om else rhs
+        cur.insts.append(_Inst(name, op, result, rhs))
+    return comps
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    # traffic inside jax.named_scope("vmem_fusible") regions: tile-
+    # resident intermediates (flash-attention scores, SSM scan states)
+    # that the shipped Pallas kernels keep in VMEM on TPU; the CPU HLO
+    # materializes them because interpret/XLA-CPU cannot express VMEM
+    # residency. Reported separately so the memory term can be given
+    # raw and kernel-fused.
+    fusible_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_MULT}
+    )
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.fusible_bytes += other.fusible_bytes * mult
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] += v * mult
+
+
+def _dot_flops(inst: _Inst, shapes: dict) -> float:
+    _, out_b = _shape_elems_bytes(inst.result)
+    out_elems, _ = _shape_elems_bytes(inst.result)
+    cdims = _LHS_CDIMS.search(inst.rhs)
+    # lhs operand shape
+    ops = _OPERANDS.findall(inst.rhs.split(")", 1)[0])
+    k = 1
+    if cdims and ops:
+        lhs_shape = shapes.get(ops[0], "")
+        m = _SHAPE_RE.search(lhs_shape)
+        if m:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            for ci in cdims.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = _parse_module(text)
+        # global name -> result type (instructions) for operand lookup
+        self.shapes: dict[str, str] = {}
+        for comp in self.comps.values():
+            for pname, ptype in comp.params.items():
+                self.shapes.setdefault(pname, ptype)
+            for inst in comp.insts:
+                self.shapes.setdefault(inst.name, inst.result)
+        self._memo: dict[str, HloCost] = {}
+        self._marker_memo: dict[str, bool] = {}
+        self.entry = self._find_entry(text)
+
+    def _comp_has_marker(self, comp_name: str) -> bool:
+        """True if any instruction in the (fusion) computation carries
+        the vmem_fusible scope. XLA fusion instructions often drop their
+        root's metadata, so the boundary line alone is not reliable."""
+        if comp_name in self._marker_memo:
+            return self._marker_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        found = bool(comp) and any(
+            "vmem_fusible" in inst.rhs for inst in comp.insts
+        )
+        self._marker_memo[comp_name] = found
+        return found
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    def _operand_bytes(self, inst: _Inst) -> float:
+        # operand names = %refs in the first paren group of the rhs
+        call = inst.rhs[inst.rhs.index("(") + 1:] if "(" in inst.rhs else ""
+        depth = 1
+        out = []
+        for ch_i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    call = call[:ch_i]
+                    break
+        total = 0.0
+        for name in _OPERANDS.findall(call):
+            t = self.shapes.get(name)
+            if t:
+                total += _shape_elems_bytes(t)[1]
+        return total
+
+    def _fusion_flops(self, comp_name: str) -> float:
+        """Dots inside a fusion body (bytes stay at the boundary)."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for inst in comp.insts:
+            if inst.op == "dot":
+                total += _dot_flops(inst, self.shapes)
+        return total
+
+    def _inplace_correction(self, comp_name: str) -> float:
+        """In-place update semantics for fusions.
+
+        A fusion whose body dynamic-update-slices (or scatters) into a
+        buffer ALIASES that buffer: real HBM traffic is the update
+        region (read+write), not the whole buffer in and out. Scan
+        stacking (remat stashes, lax.map outputs, KV-cache writes) all
+        hit this; without the correction an 88-layer remat stash counts
+        as 88 x full-stash traffic. Returns the (negative) byte delta
+        to apply at the fusion boundary.
+        """
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        delta = 0.0
+        sliced_params: set = set()
+        dus_results: set = set()
+        for inst in comp.insts:
+            if inst.op in ("dynamic-update-slice", "scatter"):
+                _, buf_b = _shape_elems_bytes(inst.result)
+                ops = _OPERANDS.findall(inst.rhs[inst.rhs.index("(") + 1:])
+                upd_b = 0
+                if len(ops) >= 2:
+                    t = self.shapes.get(ops[1], "")
+                    upd_b = _shape_elems_bytes(t)[1]
+                buf_src = ops[0] if ops else ""
+                dus_results.add(inst.name)
+                # The full buffer crosses the fusion boundary at most
+                # twice (as a parameter and as the output); chained
+                # updates into the same buffer only add their update
+                # traffic.
+                if buf_src in comp.params:
+                    delta += 2.0 * upd_b - 2.0 * buf_b
+                elif buf_src in dus_results:
+                    delta += 2.0 * upd_b
+                else:  # buffer materialized in-body; only output side
+                    delta += 2.0 * upd_b - buf_b
+            elif inst.op in ("dynamic-slice", "gather"):
+                # reading a slice of a big parameter buffer: traffic is
+                # the slice, not the buffer
+                ops = _OPERANDS.findall(inst.rhs[inst.rhs.index("(") + 1:])
+                if ops and ops[0] in comp.params and ops[0] not in sliced_params:
+                    sliced_params.add(ops[0])
+                    buf_b = _shape_elems_bytes(comp.params[ops[0]])[1]
+                    out_b = _shape_elems_bytes(inst.result)[1]
+                    delta -= max(0.0, buf_b - out_b)
+        return delta
+
+    def cost_of(self, comp_name: str) -> HloCost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = HloCost()  # cycle guard
+        comp = self.comps.get(comp_name)
+        cost = HloCost()
+        if comp is None:
+            return cost
+        for inst in comp.insts:
+            op = inst.op
+            if op in _NO_TRAFFIC or not op:
+                continue
+            _, out_b = _shape_elems_bytes(inst.result)
+            if op == "while":
+                # control flow: no boundary traffic (loop state is
+                # aliased in place; body ops are counted per trip)
+                trips = 1
+                tm = _TRIP.search(inst.rhs)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _BODY.search(inst.rhs)
+                if bm:
+                    cost.add(self.cost_of(bm.group(1)), mult=trips)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                cm = _CALLS.search(inst.rhs) or _BODY.search(inst.rhs)
+                if cm:
+                    cost.add(self.cost_of(cm.group(1)))
+                continue
+            base = op.replace("-start", "")
+            if base in _COLL_MULT:
+                wire = out_b * _COLL_MULT[base]
+                if base == "all-reduce":
+                    # payload = operand (result == operand for all-reduce)
+                    pass
+                cost.collective_bytes += wire
+                cost.collective_breakdown[base] += wire
+                cost.bytes += out_b + self._operand_bytes(inst)
+                continue
+            if op.endswith("-done"):
+                continue
+            fusible = "vmem_fusible" in inst.rhs
+            if not fusible and op == "fusion":
+                fm = _CALLS.search(inst.rhs)
+                if fm:
+                    fusible = self._comp_has_marker(fm.group(1))
+
+            def _acc(n: float):
+                if fusible:
+                    cost.fusible_bytes += n
+                else:
+                    cost.bytes += n
+
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place: traffic = update region read+write (+ indices)
+                ops = _OPERANDS.findall(inst.rhs[inst.rhs.index("(") + 1:])
+                upd_b = 0
+                if len(ops) >= 2:
+                    upd_b = _shape_elems_bytes(self.shapes.get(ops[1], ""))[1]
+                _acc(2.0 * upd_b)
+                continue
+            if op in ("dynamic-slice", "gather"):
+                # slice-read: traffic ~= the slice (indices negligible)
+                _acc(2.0 * out_b)
+                continue
+            if op == "dot":
+                cost.flops += _dot_flops(inst, self.shapes)
+                _acc(out_b + self._operand_bytes(inst))
+                continue
+            if op == "fusion":
+                cm = _CALLS.search(inst.rhs)
+                boundary = out_b + self._operand_bytes(inst)
+                if cm:
+                    cost.flops += self._fusion_flops(cm.group(1))
+                    boundary = max(
+                        0.0, boundary + self._inplace_correction(cm.group(1))
+                    )
+                _acc(boundary)
+                continue
+            _acc(out_b + self._operand_bytes(inst))
+            if op == "convolution":
+                # approximation: 2 * out_elems * (in_ch * window) — we
+                # have no conv ops in the LM paths; BNN convs go via dot.
+                cost.flops += 2.0 * _shape_elems_bytes(inst.result)[0]
+        self._memo[comp_name] = cost
+        return cost
+
+    def total(self) -> HloCost:
+        return self.cost_of(self.entry)
+
+
+def analyze(text: str) -> HloCost:
+    return HloCostModel(text).total()

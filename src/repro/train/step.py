@@ -1,0 +1,101 @@
+"""pjit-able train / serve step factories.
+
+``make_train_step(model, opt_cfg)`` returns a pure
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` function:
+value_and_grad over the model loss (remat'd scan inside), global-norm
+clip, AdamW with latent-weight clipping (BNN training detail), optional
+microbatch gradient accumulation (scan over microbatches — the
+activation-memory knob), optional error-feedback int8 gradient
+compression on the data-parallel axis (see distributed/compression.py
+for scope notes).
+
+``make_decode_step`` / ``make_prefill`` wrap the model's serving
+functions — these are what the decode/prefill dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_factory import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.schedules import cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig(lr=3e-4, weight_decay=0.01, latent_clip=True)
+    clip_norm: float = 1.0
+    microbatches: int = 1          # >1 => gradient accumulation
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["adam"]["count"]
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                acc, = carry
+                loss, metrics, grads = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, acc, grads),), (loss, metrics)
+
+            mbs = jax.tree.map(
+                lambda t: t.reshape(tcfg.microbatches,
+                                    t.shape[0] // tcfg.microbatches,
+                                    *t.shape[1:]),
+                batch,
+            )
+            zero = jax.tree.map(jnp.zeros_like, params)
+            (gsum,), (losses, _) = jax.lax.scan(micro, (zero,), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = jnp.mean(losses)
+        else:
+            loss, _, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr_scale = cosine_schedule(
+            step, warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps
+        )
+        new_params, new_adam = adamw_update(
+            grads, opt_state["adam"], params, tcfg.adamw, lr_scale=lr_scale
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return new_params, {"adam": new_adam}, metrics
+
+    return train_step
+
+
+def init_opt_state(params) -> dict:
+    return {"adam": adamw_init(params)}
+
+
+def make_prefill(model: Model):
+    def prefill_step(params, state, batch):
+        return model.prefill(params, state, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, state, batch):
+        return model.decode_step(params, state, batch)
+
+    return decode_step

@@ -1,0 +1,201 @@
+"""Core library behaviour: bitops semantics, STE gradients, layer modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitops
+from repro.core.binarize import (
+    QuantMode,
+    binarize_activations,
+    binarize_weights,
+    ste_sign,
+)
+from repro.core.im2col import col2im, filters_to_matrix, im2col
+from repro.core.layers import (
+    BitLinearConfig,
+    bit_conv2d,
+    bit_linear,
+    init_conv,
+    init_linear,
+    pack_conv_params,
+    pack_linear_params,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------ bitops --------------------------------------
+
+def test_pack_bits_lsb_first():
+    # element j*32+b maps to bit b of word j.
+    x = -jnp.ones((64,))
+    x = x.at[0].set(1.0).at[33].set(1.0)
+    words = bitops.pack_bits(x)
+    assert int(words[0]) == 1          # bit 0 of word 0
+    assert int(words[1]) == 2          # bit 1 of word 1
+
+
+def test_pack_sign_zero_is_plus_one():
+    x = jnp.zeros((32,))
+    assert int(bitops.pack_bits(x)[0]) == -1  # all 32 bits set (int32 view)
+
+
+def test_xnor_popcount_matmul_blocked_equals_unblocked():
+    key = KEY
+    w = jax.random.normal(jax.random.fold_in(key, 0), (17, 224))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (224, 23))
+    wp, xp = bitops.pack_bits(w, -1), bitops.pack_bits(x, 0)
+    a = bitops.xnor_popcount_matmul(wp, xp, 224, block_kw=2)
+    b = bitops.xnor_popcount_matmul(wp, xp, 224, block_kw=64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(kw=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_identity(kw, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (kw * 32, 5))
+    signs = jnp.where(x >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(
+        np.asarray(bitops.unpack_bits(bitops.pack_bits(x, 0), 0)),
+        np.asarray(signs),
+    )
+
+
+def test_packed_matmul_unpack_equals_sign_matmul():
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (48, 96))
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (96, 12))
+    wp = bitops.pack_bits(w, -1)
+    got = bitops.packed_matmul_unpack(wp, x, compute_dtype=jnp.float32)
+    want = jnp.where(w >= 0, 1.0, -1.0) @ x
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ------------------------------ binarize ------------------------------------
+
+def test_ste_sign_forward():
+    x = jnp.array([-2.0, -0.0, 0.0, 0.5])
+    np.testing.assert_array_equal(
+        np.asarray(ste_sign(x)), np.array([-1.0, 1.0, 1.0, 1.0])
+    )
+
+
+def test_ste_sign_gradient_htanh_window():
+    g = jax.grad(lambda v: ste_sign(v).sum())(
+        jnp.array([-2.0, -1.0, -0.5, 0.0, 0.7, 1.0, 3.0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g), np.array([0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0])
+    )
+
+
+def test_binarize_weights_scale():
+    w = jnp.array([[1.0, -3.0], [0.5, 0.5]])
+    wb, alpha = binarize_weights(w, scale_axis=-1)
+    np.testing.assert_array_equal(np.asarray(wb), np.array([[1, -1], [1, 1]]))
+    np.testing.assert_allclose(np.asarray(alpha).ravel(), [2.0, 0.5])
+
+
+def test_binarize_activations_values():
+    x = jnp.array([-5.0, -0.2, 0.0, 0.3, 9.0])
+    np.testing.assert_array_equal(
+        np.asarray(binarize_activations(x)), np.array([-1, -1, 1, 1, 1])
+    )
+
+
+# ------------------------------ im2col --------------------------------------
+
+def test_im2col_matches_lax_conv():
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 9, 11, 5))
+    w = jax.random.normal(jax.random.fold_in(KEY, 5), (7, 3, 3, 5))
+    patches, (oh, ow) = im2col(x, 3, 3, stride=2, pad=1)
+    y = col2im(patches @ filters_to_matrix(w).T, oh, ow)
+    want = jax.lax.conv_general_dilated(
+        x, jnp.transpose(w, (1, 2, 3, 0)), (2, 2), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)
+
+
+# ------------------------------ layers --------------------------------------
+
+ENGINES = ["xnor", "unpack", "xla"]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("in_f", [256, 100])
+def test_bit_linear_packed_equals_fake_quant(engine, in_f):
+    p = init_linear(jax.random.fold_in(KEY, 6), in_f, 64)
+    x = jax.random.normal(jax.random.fold_in(KEY, 7), (9, in_f))
+    want = bit_linear(p, x, BitLinearConfig(mode=QuantMode.FAKE_QUANT))
+    got = bit_linear(
+        pack_linear_params(p), x,
+        BitLinearConfig(mode=QuantMode.PACKED, engine=engine),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_bit_conv2d_packed_equals_fake_quant(engine):
+    p = init_conv(jax.random.fold_in(KEY, 8), 3, 3, 16, 32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (2, 8, 8, 16))
+    want = bit_conv2d(p, x, BitLinearConfig(mode=QuantMode.FAKE_QUANT), pad=1)
+    got = bit_conv2d(
+        pack_conv_params(p), x,
+        BitLinearConfig(mode=QuantMode.PACKED, engine=engine),
+        pad=1, kh=3, kw=3,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_bit_linear_weight_only_mode():
+    """binarize_acts=False: real activations vs ±1 weights (LM serving)."""
+    p = init_linear(jax.random.fold_in(KEY, 10), 128, 32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 11), (4, 128))
+    want = x @ jnp.where(p["w"] >= 0, 1.0, -1.0).T + p["b"]
+    got = bit_linear(
+        pack_linear_params(p), x,
+        BitLinearConfig(mode=QuantMode.PACKED, engine="xla", binarize_acts=False),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_bit_linear_scale_factor():
+    p = init_linear(jax.random.fold_in(KEY, 12), 64, 16)
+    x = jax.random.normal(jax.random.fold_in(KEY, 13), (3, 64))
+    want = bit_linear(
+        p, x, BitLinearConfig(mode=QuantMode.FAKE_QUANT, use_scale=True)
+    )
+    got = bit_linear(
+        pack_linear_params(p, use_scale=True), x,
+        BitLinearConfig(mode=QuantMode.PACKED, engine="xla", use_scale=True),
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_fake_quant_is_trainable():
+    """Loss decreases under STE on a realizable ±1 regression — the BNN
+    training recipe (latent fp weights, binary forward) actually learns."""
+    p = init_linear(jax.random.fold_in(KEY, 14), 32, 4)
+    x = jax.random.normal(jax.random.fold_in(KEY, 15), (64, 32))
+    w_true = jnp.where(
+        jax.random.normal(jax.random.fold_in(KEY, 16), (4, 32)) >= 0, 1.0, -1.0
+    )
+    y = x @ w_true.T
+    cfg = BitLinearConfig(
+        mode=QuantMode.FAKE_QUANT, binarize_acts=False, use_scale=True
+    )
+
+    def loss(params):
+        return jnp.mean((bit_linear(params, x, cfg) - y) ** 2)
+
+    l0 = loss(p)
+    for _ in range(150):
+        g = jax.grad(loss)(p)
+        p = jax.tree.map(lambda a, b: a - 0.02 * b, p, g)
+    assert loss(p) < l0 * 0.7

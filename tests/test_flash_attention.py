@@ -1,0 +1,66 @@
+"""Flash-attention Pallas kernel vs the pure-jnp oracle.
+
+Shape/dtype sweep + causal/non-causal, interpret mode on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def ref_attention(q, k, v, *, causal):
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("bh,sq,skv,dh", [
+    (2, 128, 128, 64),
+    (1, 256, 256, 128),
+    (3, 128, 256, 32),     # cross/kv-longer (non-causal only)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(bh, sq, skv, dh, dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, sq, dh), dtype)
+    k = jax.random.normal(kk, (bh, skv, dh), dtype)
+    v = jax.random.normal(kv_, (bh, skv, dh), dtype)
+    causal = sq == skv
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64,
+                          interpret=True)
+    ref = ref_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref, atol=tol, rtol=tol
+    )
+
+
+def test_flash_causal_first_row_is_v0():
+    # position 0 attends only to kv 0
+    q = jnp.ones((1, 64, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 32))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32,
+                          interpret=True)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], atol=1e-5, rtol=1e-5)
+
+
+def test_flash_block_shape_invariance():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 256, 64))
+    k = jax.random.normal(key, (2, 256, 64))
+    v = jax.random.normal(key, (2, 256, 64))
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_kv=128,
+                        interpret=True)
+    b = flash_attention(q, k, v, causal=True, block_q=256, block_kv=32,
+                        interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,165 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Every kernel sweeps shapes (aligned, unaligned, tiny, rectangular) and
+is asserted allclose/bit-exact against ``repro.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitops
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_pm1(key, shape):
+    return jnp.where(jax.random.bernoulli(key, 0.5, shape), 1.0, -1.0)
+
+
+SHAPES = [
+    (128, 256, 128),   # tile-aligned
+    (96, 320, 200),    # M/N unaligned
+    (128, 96, 128),    # KW < block_kw after packing (96/32 = 3 words)
+    (1, 32, 1),        # minimal
+    (257, 544, 130),   # everything unaligned
+    (64, 1024, 512),   # deep K
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_xnor_gemm_matches_float_truth(m, k, n):
+    key = jax.random.PRNGKey(m * 7 + k * 3 + n)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    truth = ref.binary_matmul_ref(wb, xb)
+    wp = bitops.pack_bits(wb, axis=-1)
+    xp = bitops.pack_bits(xb, axis=0)
+    out = ops.xnor_gemm(wp, xp, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(truth))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_xnor_gemm_matches_ref_oracle(m, k, n):
+    key = jax.random.PRNGKey(m + k + n)
+    wp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 0), (m, k)), axis=-1)
+    xp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 1), (k, n)), axis=0)
+    out = ops.xnor_gemm(wp, xp, k, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.xnor_gemm_ref(wp, xp, k))
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_unpack_gemm_matches_oracle(m, k, n):
+    key = jax.random.PRNGKey(m ^ k ^ n)
+    w = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    wp = bitops.pack_bits(w, axis=-1)
+    out = ops.unpack_gemm(wp, x, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.unpack_gemm_ref(wp, x)),
+        rtol=1e-5, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize(
+    "k,n", [(32, 128), (64, 100), (256, 1), (1024, 333), (32, 129)]
+)
+def test_pack_kernel_matches_ref(k, n):
+    x = jax.random.normal(jax.random.PRNGKey(k + n), (k, n))
+    out = ops.pack_rows(x, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.pack_ref(x, axis=0))
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bkw", [(128, 128, 16), (256, 128, 8), (128, 256, 32)])
+def test_xnor_gemm_block_shape_invariance(bm, bn, bkw):
+    """Result must not depend on the chosen tiling."""
+    key = jax.random.PRNGKey(9)
+    m, k, n = 160, 640, 96
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    wp, xp = bitops.pack_bits(wb, -1), bitops.pack_bits(xb, 0)
+    out = ops.xnor_gemm(
+        wp, xp, k, block_m=bm, block_n=bn, block_kw=bkw, interpret=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.binary_matmul_ref(wb, xb))
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_unpack_gemm_dtypes(dtype):
+    key = jax.random.PRNGKey(11)
+    w = _rand_pm1(jax.random.fold_in(key, 0), (64, 128))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (128, 64)).astype(dtype)
+    wp = bitops.pack_bits(w, axis=-1)
+    out = ops.unpack_gemm(wp, x, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.unpack_gemm_ref(wp, x.astype(jnp.float32))),
+        rtol=2e-2, atol=2e-1,
+    )
+
+
+# --------------------------- property-based ---------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    kw=st.integers(1, 12),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xnor_gemm_property(m, kw, n, seed):
+    """For random packed operands of any shape, the kernel equals the
+    exact ±1 dot product (invariant: 2*popcount(xnor) - K)."""
+    k = kw * 32
+    key = jax.random.PRNGKey(seed)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    out = ops.xnor_gemm(
+        bitops.pack_bits(wb, -1), bitops.pack_bits(xb, 0), k, interpret=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.binary_matmul_ref(wb, xb))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kw=st.integers(1, 16),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip_property(kw, n, seed):
+    k = kw * 32
+    x = _rand_pm1(jax.random.PRNGKey(seed), (k, n))
+    packed = bitops.pack_bits(x, axis=0)
+    rt = bitops.unpack_bits(packed, axis=0)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    kw=st.integers(1, 8),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_engines_agree_property(m, kw, n, seed):
+    """xnor and unpack engines compute the same binary contraction."""
+    k = kw * 32
+    key = jax.random.PRNGKey(seed)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    wp = bitops.pack_bits(wb, -1)
+    a = ops.xnor_gemm(wp, bitops.pack_bits(xb, 0), k, interpret=True)
+    b = ops.unpack_gemm(wp, xb, interpret=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b))

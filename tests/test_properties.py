@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on the system's core invariants:
+
+* pack/unpack is a bijection on ±1 tensors,
+* xnor-popcount GEMM == ±1 float GEMM for ANY packed shapes,
+* packed BitLinear == fake-quant BitLinear on ±1-valued weights,
+* EF-compression error is bounded by one quantization step,
+* sharding specs always divide (the divisibility guard is total).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+from repro.core.binarize import QuantMode
+from repro.core.layers import BitLinearConfig, bit_linear, pack_linear_params
+from repro.distributed import compression, sharding
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=6)
+
+
+@given(
+    m=st.integers(1, 5), kw=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(m, kw, seed):
+    rng = np.random.default_rng(seed)
+    x = np.sign(rng.normal(size=(m, kw * 32))) + 0.0
+    x[x == 0] = 1.0
+    packed = bitops.pack_bits(jnp.asarray(x), axis=1)
+    assert packed.shape == (m, kw)
+    back = bitops.unpack_bits(packed, axis=1)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@given(
+    m=st.integers(1, 4), kw=st.integers(1, 3), n=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_xnor_gemm_equals_pm1_gemm(m, kw, n, seed):
+    rng = np.random.default_rng(seed)
+    k = kw * 32
+    w = np.sign(rng.normal(size=(m, k))) + 0.0
+    x = np.sign(rng.normal(size=(k, n))) + 0.0
+    w[w == 0] = 1.0
+    x[x == 0] = 1.0
+    wp = bitops.pack_bits(jnp.asarray(w), axis=1)
+    xp = bitops.pack_bits(jnp.asarray(x), axis=0)
+    ref = (w @ x).astype(np.int32)
+    got = bitops.xnor_popcount_matmul(wp, xp, k)
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+@given(
+    din=st.integers(1, 70), dout=st.integers(1, 8), b=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_packed_linear_matches_fakequant(din, dout, b, seed):
+    """For ±1-valued latent weights, PACKED == FAKE_QUANT exactly —
+    including the K-padding correction for din not divisible by 32."""
+    rng = np.random.default_rng(seed)
+    w = np.sign(rng.normal(size=(dout, din))).astype(np.float32)
+    w[w == 0] = 1.0
+    x = rng.normal(size=(b, din)).astype(np.float32)
+    params = {"w": jnp.asarray(w)}
+    packed = pack_linear_params(params)
+    fq = bit_linear(params, jnp.asarray(x),
+                    BitLinearConfig(mode=QuantMode.FAKE_QUANT,
+                                    binarize_acts=False))
+    pk = bit_linear(packed, jnp.asarray(x),
+                    BitLinearConfig(mode=QuantMode.PACKED,
+                                    binarize_acts=False, engine="xla"))
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(fq),
+                               rtol=2e-5, atol=2e-4)
+
+
+@given(
+    n=st.integers(2, 300), scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_compression_error_bounded(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, scale, n).astype(np.float32))
+    deq, err = compression.compress_decompress(g, jnp.zeros_like(g))
+    step = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= step * 0.5 + 1e-6
+
+
+class _ShapeMesh:
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    pod=st.sampled_from([1, 2]),
+    data=st.sampled_from([4, 16]),
+    model=st.sampled_from([4, 16]),
+)
+@settings(max_examples=50, deadline=None)
+def test_sharding_specs_always_divide(dims, pod, data, model):
+    """No rule may emit a spec whose axis size does not divide the dim."""
+    mesh = _ShapeMesh(pod=pod, data=data, model=model)
+    leaf = np.zeros(tuple(dims))
+    for path in (["q_proj", "w"], ["down_proj", "w"], ["moe", "up_proj", "w"],
+                 ["lm_head", "w"], ["up_proj", "w_packed"]):
+        keys = tuple(jax.tree_util.DictKey(k) for k in path)
+        spec = sharding.param_spec(mesh, keys, leaf)
+        for dim, ax in zip(dims, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (path, dims, spec)
