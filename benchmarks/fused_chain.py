@@ -1,0 +1,127 @@
+"""Unfused vs fused packed BNN forward: wall time + structural bytes.
+
+No TPU in this container, so the wall-clock numbers are CPU/interpret
+measurements at validation scale (NOT a TPU perf claim); the structural
+inter-layer traffic model is shape-derived and backend-independent
+(DESIGN.md §4). Writes BENCH_fused.json at the repo root to seed the
+perf trajectory across PRs.
+
+  PYTHONPATH=src python -m benchmarks.fused_chain
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.kernel_microbench import fused_chain_traffic
+from repro.core.binarize import QuantMode
+from repro.core.bnn import (
+    BNNConfig,
+    bnn_apply,
+    bnn_apply_fused,
+    init_bnn_params,
+    pack_bnn_params,
+    pack_bnn_params_fused,
+)
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused.json"
+
+
+def _time(fn, *args, repeats: int = 3) -> tuple[float, jnp.ndarray]:
+    out = fn(*args)  # compile / warm up
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / repeats, out
+
+
+def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = init_bnn_params(key)
+    images = jax.random.normal(jax.random.fold_in(key, 1), (batch, 32, 32, 3))
+    packed = pack_bnn_params(params)
+    fused = pack_bnn_params_fused(params)
+
+    cfg = BNNConfig(mode=QuantMode.PACKED, engine="xla")
+    t_unfused, want = _time(
+        jax.jit(lambda p, x: bnn_apply(p, x, cfg)), packed, images
+    )
+    t_fused, got = _time(
+        jax.jit(lambda p, x: bnn_apply_fused(p, x, engine="xla")),
+        fused, images,
+    )
+    bit_identical = bool(jnp.all(got == want))
+
+    # Pallas interpret engine at tiny scale (interpreter is python-speed;
+    # this validates the fused kernel path end to end, not TPU perf).
+    small = images[:2]
+    t_unfused_xnor, w2 = _time(
+        lambda: bnn_apply(
+            packed, small, BNNConfig(mode=QuantMode.PACKED, engine="xnor")
+        ),
+        repeats=1,
+    )
+    t_fused_xnor, g2 = _time(
+        lambda: bnn_apply_fused(fused, small, engine="xnor"), repeats=1
+    )
+    bit_identical_xnor = bool(jnp.all(g2 == w2))
+
+    chain = fused_chain_traffic(batch)
+    result = {
+        "batch": batch,
+        "wall_time_s": {
+            "unfused_packed_xla": t_unfused,
+            "fused_packed_xla": t_fused,
+            "speedup_xla": t_unfused / t_fused,
+            "unfused_packed_xnor_interpret_b2": t_unfused_xnor,
+            "fused_packed_xnor_interpret_b2": t_fused_xnor,
+            "speedup_xnor_interpret": t_unfused_xnor / t_fused_xnor,
+        },
+        "logits_bit_identical": {
+            "xla": bit_identical, "xnor": bit_identical_xnor
+        },
+        "interlayer_bytes": {
+            "unfused": chain["total"]["unfused_bytes"],
+            "fused": chain["total"]["fused_bytes"],
+            "ratio": chain["total"]["bytes_ratio"],
+        },
+        "launches_per_binary_layer": {"unfused": 2, "fused": 1},
+        "note": (
+            "CPU-only numbers. The xla rows are NOT engine-matched: the "
+            "unfused 'xla' engine lowers to unpack+float-dot (fast on "
+            "CPU) while the fused fallback keeps the popcount GEMM; the "
+            "xnor rows compare the same popcount engine fused vs "
+            "unfused. The backend-independent claim is interlayer_bytes."
+        ),
+    }
+    if verbose:
+        wt = result["wall_time_s"]
+        print(f"unfused packed (xla)  b{batch}: {wt['unfused_packed_xla']:.3f}s")
+        print(f"fused packed   (xla)  b{batch}: {wt['fused_packed_xla']:.3f}s "
+              f"({wt['speedup_xla']:.2f}x)")
+        print(f"unfused packed (xnor-interpret) b2: "
+              f"{wt['unfused_packed_xnor_interpret_b2']:.3f}s")
+        print(f"fused packed   (xnor-interpret) b2: "
+              f"{wt['fused_packed_xnor_interpret_b2']:.3f}s "
+              f"({wt['speedup_xnor_interpret']:.2f}x)")
+        print(f"logits bit-identical: {result['logits_bit_identical']}")
+        ib = result["interlayer_bytes"]
+        print(f"inter-layer bytes: {ib['unfused']/1e6:.1f} MB -> "
+              f"{ib['fused']/1e6:.1f} MB ({ib['ratio']:.1f}x fewer)")
+    if write:
+        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
+        if verbose:
+            print(f"wrote {BENCH_PATH}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

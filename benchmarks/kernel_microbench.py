@@ -18,22 +18,90 @@ from repro.core import bitops
 from repro.kernels import ops as kops
 
 
+def _ceil_div(a: int, b: int) -> int:
+    return -(a // -b)
+
+
 def traffic_model(m: int, k: int, n: int) -> dict:
-    """Bytes/HBM per GEMM for each engine (weights resident in HBM)."""
+    """Bytes/HBM per GEMM for each engine (weights resident in HBM).
+
+    Packed word counts use CEILING division: k % 32 != 0 still moves
+    ceil(k/32) words per row (the pad bits ride along in the last word).
+    """
     f32 = 4
+    kw = _ceil_div(k, 32)  # packed words per K row, incl. partial word
+    mw = _ceil_div(m, 32)  # packed words per output column (fused out)
     rows = {
         # float GEMM: w[m,k] f32 + x[k,n] f32 + out f32
         "float_gemm": (m * k + k * n + m * n) * f32,
-        # paper xnor: packed w [m,k/32] i32 + packed x [k/32,n] i32 + out i32
-        "xnor_packed": (m * (k // 32) + (k // 32) * n) * 4 + m * n * 4,
+        # paper xnor: packed w [m,kw] i32 + packed x [kw,n] i32 + out i32
+        "xnor_packed": (m * kw + kw * n) * 4 + m * n * 4,
         # unpack-MXU: packed w + bf16 x + f32 out
-        "unpack_mxu": m * (k // 32) * 4 + k * n * 2 + m * n * 4,
+        "unpack_mxu": m * kw * 4 + k * n * 2 + m * n * 4,
+        # fused chain layer: packed w + packed x in, PACKED out — the
+        # [m, n] float/int32 activation never reaches HBM (DESIGN.md §4)
+        "fused_chain": (m * kw + kw * n) * 4 + mw * n * 4,
     }
     flops = 2 * m * k * n
     return {
         name: {"bytes": b, "flops_per_byte": flops / b}
         for name, b in rows.items()
     }
+
+
+# The CIFAR BNN's binary conv/FC chain: (M=out_channels, K, N=pixels)
+# per interior binary layer at batch B, derived from the model's own
+# architecture constants so this never drifts from the network. First
+# conv and last FC keep float boundaries and are excluded.
+def _bnn_binary_chain(batch: int):
+    from repro.core.bnn import CONV_CHANNELS, FC_SIZES, POOL_AFTER
+
+    shapes = []
+    hw = 32
+    for i, (cin, cout) in enumerate(CONV_CHANNELS):
+        if i > 0:  # first conv: float boundary
+            shapes.append((f"conv{i}", cout, 9 * cin, batch * hw * hw))
+        if i in POOL_AFTER:
+            hw //= 2
+    for j, (fin, fout) in enumerate(FC_SIZES[:-1]):  # last FC: float out
+        shapes.append((f"fc{j}", fout, fin, batch))
+    return shapes
+
+
+def fused_chain_traffic(batch: int = 64) -> dict:
+    """Inter-layer HBM bytes + kernel launches, unfused vs fused, for
+    every interior binary layer of the CIFAR BNN.
+
+    Unfused boundary (per layer), conservatively modelled: one float
+    [M, N] activation write (GEMM out) + one read (by pack_rows), plus
+    the packed-word write + read — BN/clip are assumed XLA-fused into
+    the producer/consumer, so their extra float passes are NOT counted
+    (counting them would only raise the unfused side, ~49x vs ~33x).
+    Fused boundary: the epilogue writes packed words; the next layer
+    reads them. Nothing else exists.
+    """
+    out = {}
+    for name, m, k, n in _bnn_binary_chain(batch):
+        mw = _ceil_div(m, 32)
+        f32_act = m * n * 4
+        packed_act = mw * n * 4
+        unfused = 2 * f32_act + 2 * packed_act  # write+read float, write+read packed
+        fused = 2 * packed_act                  # write+read packed only
+        out[name] = {
+            "m,k,n": (m, k, n),
+            "unfused_bytes": unfused,
+            "fused_bytes": fused,
+            "bytes_ratio": unfused / fused,
+            "launches_per_layer": {"unfused": 2, "fused": 1},  # pack+gemm vs fused
+        }
+    tot_u = sum(r["unfused_bytes"] for r in out.values())
+    tot_f = sum(r["fused_bytes"] for r in out.values())
+    out["total"] = {
+        "unfused_bytes": tot_u,
+        "fused_bytes": tot_f,
+        "bytes_ratio": tot_u / tot_f,
+    }
+    return out
 
 
 def run(verbose: bool = True) -> dict:
@@ -49,6 +117,20 @@ def run(verbose: bool = True) -> dict:
                       f"{row['flops_per_byte']:8.1f} FLOP/byte")
             xr = tm['float_gemm']['bytes'] / tm['xnor_packed']['bytes']
             print(f"  -> xnor moves {xr:.1f}x fewer bytes (paper's win on TPU)")
+
+    chain = fused_chain_traffic()
+    out["fused_chain"] = chain
+    if verbose:
+        print("fused packed chain (CIFAR BNN, batch 64) — boundary bytes:")
+        for name, row in chain.items():
+            if name == "total":
+                continue
+            print(f"  {name:6s} unfused {row['unfused_bytes']/1e6:8.2f} MB "
+                  f"fused {row['fused_bytes']/1e6:7.2f} MB "
+                  f"({row['bytes_ratio']:.1f}x, 1 fewer launch)")
+        print(f"  total  {chain['total']['unfused_bytes']/1e6:8.2f} MB -> "
+              f"{chain['total']['fused_bytes']/1e6:.2f} MB "
+              f"({chain['total']['bytes_ratio']:.1f}x fewer inter-layer bytes)")
 
     # interpret-mode correctness-scale timing (NOT a TPU perf claim)
     rng = np.random.default_rng(0)

@@ -25,6 +25,14 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("Fused packed chain — unfused vs fused forward (BENCH_fused.json)")
+    print("=" * 72)
+    from benchmarks import fused_chain
+
+    fused_chain.run()
+
+    print()
+    print("=" * 72)
     print("Roofline table — (arch x shape x mesh) from the dry-run")
     print("=" * 72)
     from benchmarks import roofline_table

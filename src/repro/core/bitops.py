@@ -35,6 +35,7 @@ __all__ = [
     "xnor_popcount_matmul",
     "packed_matmul_unpack",
     "pad_packed_operands",
+    "fused_xnor_layer",
 ]
 
 
@@ -131,6 +132,38 @@ def packed_matmul_unpack(
         out = jnp.dot(w, x.astype(compute_dtype),
                       preferred_element_type=accum_dtype)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "block_kw"))
+def fused_xnor_layer(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    block_kw: int = 64,
+) -> jnp.ndarray:
+    """Whole fused binary layer, pure-XLA (the oracle for the Pallas
+    fused kernel, and the SPMD-safe fallback engine).
+
+    Packed ``wp [M, KW]`` x packed ``xp [KW, N]`` -> packed ``[ceil(M/32), N]``:
+
+        dot  = 2*popcount(xnor) - k_bits        (exact ±1 dot product)
+        y    = a*dot + b                         (folded BN/bias/alpha affine)
+        bits = y >= 0, repacked along M (LSB-first)
+
+    ``k_bits`` is the TRUE contraction length: bit-level K padding must
+    follow the xnor-neutral convention (weight pad bits 0/-1, activation
+    pad bits 1/+1 -> zero popcount), so no post-hoc correction is needed.
+    M rows beyond ``M`` inside the last output word are padded with +1
+    bits — exactly what the next layer's weight-pad correction expects.
+    """
+    dot = xnor_popcount_matmul(wp, xp, k_bits, block_kw=block_kw)
+    y = a[:, None] * dot.astype(a.dtype) + b[:, None]
+    pad = -y.shape[0] % PACK_BITS
+    if pad:
+        y = jnp.pad(y, ((0, pad), (0, 0)), constant_values=1.0)
+    return pack_bits(y, axis=0)
 
 
 def pad_packed_operands(wp, xp, block_m, block_n, block_kw):

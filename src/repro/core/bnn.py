@@ -18,6 +18,11 @@ share this one graph:
     PyTorch BNNs run (±1 in float math, STE backward).
   * ``QuantMode.PACKED``     — the paper's kernel: 1-bit packed weights,
     xnor-popcount (engine="xnor") or unpack->MXU (engine="unpack").
+
+``bnn_apply_fused`` is the fourth execution path: same function as
+PACKED (bit-identical logits) but interior layer boundaries carry
+packed int32 activations — BN folds into the fused kernel's epilogue
+and maxpool becomes a bitwise OR on words (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -29,15 +34,22 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import bitops
 from repro.core.binarize import QuantMode, binarize_activations
 from repro.core.layers import (
+    BN_EPS,
     BitLinearConfig,
     bit_conv2d,
     bit_linear,
+    fused_bit_conv2d,
+    fused_bit_linear,
     init_conv,
     init_linear,
+    pack_conv_fused,
     pack_conv_params,
+    pack_linear_fused,
     pack_linear_params,
+    packed_act_linear,
 )
 
 CONV_CHANNELS = [(3, 128), (128, 128), (128, 256), (256, 256), (256, 512), (512, 512)]
@@ -100,6 +112,35 @@ def pack_bnn_params(params: dict, *, use_scale: bool = False) -> dict:
     return packed
 
 
+def pack_bnn_params_fused(params: dict, *, use_scale: bool = False) -> dict:
+    """Latent float params -> fused-pipeline inference params.
+
+    Like :func:`pack_bnn_params`, but every *interior* binary layer also
+    folds its inference BatchNorm (+ bias + optional alpha) into the
+    ``(a, b)`` epilogue affine (``fold_bn_params``), so the fused kernel
+    can emit packed ±1 activations directly. Float boundaries survive at
+    the two ends only: the first conv (real-valued images in) and the
+    last FC (real-valued logits out, BN kept separate).
+    """
+    n_fc = len(FC_SIZES)
+    return {
+        "conv": [params["conv"][0]]
+        + [
+            pack_conv_fused(p, bn, use_scale=use_scale)
+            for p, bn in zip(params["conv"][1:], params["bn_conv"][1:])
+        ],
+        "bn_conv0": params["bn_conv"][0],
+        "fc": [
+            pack_linear_fused(
+                params["fc"][j], params["bn_fc"][j], use_scale=use_scale
+            )
+            for j in range(n_fc - 1)
+        ]
+        + [pack_linear_params(params["fc"][-1], use_scale=use_scale)],
+        "bn_fc_last": params["bn_fc"][-1],
+    }
+
+
 def _batchnorm(p: dict, x: jnp.ndarray, training: bool) -> jnp.ndarray:
     axes = tuple(range(x.ndim - 1))
     if training:
@@ -107,7 +148,7 @@ def _batchnorm(p: dict, x: jnp.ndarray, training: bool) -> jnp.ndarray:
         var = jnp.var(x, axes)
     else:
         mean, var = p["mean"], p["var"]
-    inv = lax.rsqrt(var + 1e-4)
+    inv = lax.rsqrt(var + BN_EPS)  # BN_EPS shared with fold_bn_params
     return (x - mean) * inv * p["gamma"] + p["beta"]
 
 
@@ -162,6 +203,66 @@ def bnn_apply(
         if not last:
             x = binarize_activations(x) if not packed else jnp.clip(x, -1, 1)
     return x
+
+
+def _maxpool2_packed(xp: jnp.ndarray) -> jnp.ndarray:
+    """2x2 maxpool on channel-packed ±1 maps = bitwise OR of the window
+    words (max over {-1,+1} is +1 iff any bit is set; valid because
+    sign is monotone, so sign∘max == max∘sign)."""
+    return (
+        xp[:, 0::2, 0::2] | xp[:, 0::2, 1::2]
+        | xp[:, 1::2, 0::2] | xp[:, 1::2, 1::2]
+    )
+
+
+def bnn_apply_fused(
+    packed: dict,
+    images: jnp.ndarray,
+    *,
+    engine: str = "xnor",
+    use_scale: bool = False,
+) -> jnp.ndarray:
+    """Fused packed inference: layer boundaries carry PACKED int32 words.
+
+    Computes the same logits as ``bnn_apply(pack_bnn_params(p), x,
+    BNNConfig(mode=PACKED))`` but between binary layers only
+    ``[.., C/32]`` int32 activations exist: each interior layer is ONE
+    fused launch (popcount GEMM -> folded-BN affine -> sign -> repack),
+    maxpool is a bitwise OR on words, and the float tensor + standalone
+    ``pack_rows`` launch of the unfused path disappear (~32x less
+    boundary HBM traffic, DESIGN.md §4). ``packed`` comes from
+    :func:`pack_bnn_params_fused`; ``engine`` is "xnor" (Pallas fused
+    kernel) or "xla" (``bitops.fused_xnor_layer``, SPMD-safe).
+    """
+    # First conv keeps its float boundary (real-valued images), exactly
+    # as in the unfused packed path; its BN output is then binarized and
+    # channel-packed ONCE, and everything stays packed from here on.
+    lcfg = BitLinearConfig(
+        mode=QuantMode.FAKE_QUANT, binarize_acts=False, use_scale=use_scale
+    )
+    x = bit_conv2d(packed["conv"][0], images, lcfg, stride=1, pad=1)
+    x = _batchnorm(packed["bn_conv0"], x, training=False)
+    xp = bitops.pack_bits(x, axis=-1)  # [N, H, W, C/32]
+
+    for i in range(1, len(CONV_CHANNELS)):
+        c_in = CONV_CHANNELS[i][0]
+        xp = fused_bit_conv2d(
+            packed["conv"][i], xp, 3 * 3 * c_in,
+            kh=3, kw=3, stride=1, pad=1, engine=engine,
+        )
+        if i in POOL_AFTER:
+            xp = _maxpool2_packed(xp)
+
+    n = xp.shape[0]
+    xp = xp.reshape(n, -1)  # word order matches pack_linear's K order
+    for j in range(len(FC_SIZES) - 1):
+        xp = fused_bit_linear(packed["fc"][j], xp, FC_SIZES[j][0],
+                              engine=engine)
+    # Last FC: float logits boundary — plain packed GEMM + bias, then
+    # the un-folded BatchNorm (same float ops as the unfused path).
+    y = packed_act_linear(packed["fc"][-1], xp, FC_SIZES[-1][0],
+                          engine=engine)
+    return _batchnorm(packed["bn_fc_last"], y, training=False)
 
 
 def bnn_loss(params, images, labels, cfg: BNNConfig):

@@ -16,17 +16,22 @@ def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
     return (size + 2 * pad - k) // stride + 1
 
 
-def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0):
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0,
+           pad_value=0):
     """[N, H, W, C] -> patches [N, OH*OW, kH*kW*C].
 
     Static python loop over the (small) kernel window keeps the ordering
-    explicit and lets XLA fuse the slices.
+    explicit and lets XLA fuse the slices. ``pad_value`` is the border
+    fill: 0 for real-valued maps, int32 ``-1`` (all bits set = +1 in the
+    sign encoding) when ``x`` holds channel-packed words — the packed
+    counterpart of "zero-pad then binarize", since sign(0) := +1.
     """
     n, h, w, c = x.shape
     oh = conv_out_size(h, kh, stride, pad)
     ow = conv_out_size(w, kw, stride, pad)
     if pad:
-        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                    constant_values=pad_value)
     cols = []
     for i in range(kh):
         for j in range(kw):

@@ -22,6 +22,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import bitops
 from repro.core.binarize import QuantMode, binarize_activations, binarize_weights
@@ -127,6 +128,141 @@ def bit_linear(params: dict, x: jnp.ndarray, cfg: BitLinearConfig) -> jnp.ndarra
             y = x @ w.astype(x.dtype).T
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Fused packed pipeline — BN-fold + sign + repack epilogue (DESIGN.md §3-4).
+# ---------------------------------------------------------------------------
+
+BN_EPS = 1e-4  # the ONE BatchNorm eps; core.bnn._batchnorm imports it
+
+
+def fold_bn_params(
+    bn: dict,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    alpha: Optional[jnp.ndarray] = None,
+    eps: float = BN_EPS,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Collapse inference BatchNorm (+ bias + XNOR-Net alpha) into the
+    per-output-channel affine ``(a, b)`` the fused epilogue applies to
+    the raw ±1 dot product (DESIGN.md §3):
+
+        y  = alpha*dot + bias                      (layer output)
+        z  = (y - mean) * gamma/sqrt(var+eps) + beta   (inference BN)
+           = a*dot + b,   a = s*alpha,  b = s*(bias - mean) + beta,
+                          s = gamma/sqrt(var+eps).
+
+    ``sign(z)`` only needs ``a*dot + b``, so the float activation never
+    has to exist. All inputs/outputs are per-channel vectors [out].
+    """
+    s = bn["gamma"] * lax.rsqrt(bn["var"] + eps)
+    a = s * alpha if alpha is not None else s
+    y0 = bias if bias is not None else jnp.zeros_like(s)
+    b = s * (y0 - bn["mean"]) + bn["beta"]
+    return a.astype(jnp.float32), b.astype(jnp.float32)
+
+
+def pack_linear_fused(params: dict, bn: dict, *, use_scale: bool = False,
+                      eps: float = BN_EPS) -> dict:
+    """Pack weights AND fold the layer's BN/bias/alpha into ``(a, b)``."""
+    packed = pack_linear_params(params, use_scale=use_scale)
+    a, b = fold_bn_params(
+        bn, bias=packed.pop("b", None), alpha=packed.pop("alpha", None),
+        eps=eps,
+    )
+    packed["a"], packed["b"] = a, b
+    return packed
+
+
+def pack_conv_fused(params: dict, bn: dict, *, use_scale: bool = False,
+                    eps: float = BN_EPS) -> dict:
+    """Conv variant of :func:`pack_linear_fused` (same (a, b) math)."""
+    packed = pack_conv_params(params, use_scale=use_scale)
+    a, b = fold_bn_params(
+        bn, bias=packed.pop("b", None), alpha=packed.pop("alpha", None),
+        eps=eps,
+    )
+    packed["a"], packed["b"] = a, b
+    return packed
+
+
+def _fused_dispatch(wp, xpT, k_orig: int, a, b, engine: str):
+    """[KW, N] packed acts -> [ceil(M/32), N] packed outputs."""
+    if engine == "xnor":
+        return kops.fused_xnor_gemm(wp, xpT, k_orig, a, b)
+    if engine == "xla":
+        return bitops.fused_xnor_layer(wp, xpT, k_orig, a, b)
+    raise ValueError(f"fused path has no engine {engine!r}")
+
+
+def fused_bit_linear(packed: dict, xp: jnp.ndarray, k_orig: int,
+                     *, engine: str = "xnor") -> jnp.ndarray:
+    """Fused binary FC: packed acts in, packed acts out.
+
+    xp: [batch, KW] int32 words (K-pad bits must be +1, the fused-output
+    convention). Returns [batch, ceil(out/32)] int32 words of
+    ``sign(a*(x·w) + b)`` — BN already applied via the folded affine.
+    """
+    out = _fused_dispatch(
+        packed["w_packed"], xp.T, k_orig, packed["a"], packed["b"], engine
+    )
+    return out.T
+
+
+def fused_bit_conv2d(
+    packed: dict,
+    xp: jnp.ndarray,
+    k_orig: int,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    engine: str = "xnor",
+) -> jnp.ndarray:
+    """Fused binary conv: channel-packed maps in, channel-packed maps out.
+
+    xp: [N, H, W, C/32] int32 (C must be a multiple of 32 so the packed
+    im2col word order matches the packed-weight word order). Spatial
+    borders pad with all-ones words — the packed image of "zero-pad then
+    sign" since sign(0) := +1. Returns [N, OH, OW, ceil(D/32)].
+    """
+    patches, (oh, ow) = im2col(
+        xp, kh, kw, stride=stride, pad=pad, pad_value=jnp.int32(-1)
+    )
+    n = patches.shape[0]
+    kwords = patches.shape[-1]
+    x2d = patches.reshape(n * oh * ow, kwords)
+    out = _fused_dispatch(
+        packed["w_packed"], x2d.T, k_orig, packed["a"], packed["b"], engine
+    )  # [DW, N*OH*OW]
+    return col2im(out.T.reshape(n, oh * ow, -1), oh, ow)
+
+
+def packed_act_linear(packed: dict, xp: jnp.ndarray, k_orig: int,
+                      *, engine: str = "xnor",
+                      compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Float-boundary epilogue-free layer for pre-packed activations:
+    the chain's LAST layer, whose output (logits) stays float.
+
+    xp: [batch, KW] int32 words. Returns float [batch, out] =
+    ``x·w (*alpha) (+bias)`` — identical math (and identical int32 dot)
+    to the unfused PACKED path, so logits stay bit-identical.
+    """
+    wp = packed["w_packed"]
+    if engine == "xnor":
+        dot = kops.xnor_gemm(wp, xp.T, k_orig)
+    elif engine == "xla":
+        dot = bitops.xnor_popcount_matmul(wp, xp.T, k_orig)
+    else:
+        raise ValueError(f"fused path has no engine {engine!r}")
+    y = dot.T.astype(compute_dtype)
+    if "alpha" in packed:
+        y = y * packed["alpha"][None, :].astype(y.dtype)
+    if "b" in packed:
+        y = y + packed["b"].astype(y.dtype)
     return y
 
 

@@ -1,11 +1,18 @@
 """Pallas TPU kernels for 1-bit xnor/bitcount computation.
 
-``xnor_gemm``  — paper-faithful packed xnor-popcount GEMM (VPU).
-``unpack_gemm`` — TPU-native packed-weight MXU GEMM (beyond-paper).
-``pack_rows``   — the paper's encoding operation as a kernel.
+``xnor_gemm``       — paper-faithful packed xnor-popcount GEMM (VPU).
+``unpack_gemm``     — TPU-native packed-weight MXU GEMM (beyond-paper).
+``pack_rows``       — the paper's encoding operation as a kernel.
+``fused_xnor_gemm`` — xnor GEMM + BN-fold/sign/repack epilogue: packed
+                      activations in AND out (DESIGN.md §4).
 
 Import the padded/dispatching wrappers from :mod:`repro.kernels.ops`;
 oracles live in :mod:`repro.kernels.ref`.
 """
 
-from repro.kernels.ops import pack_rows, unpack_gemm, xnor_gemm  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    fused_xnor_gemm,
+    pack_rows,
+    unpack_gemm,
+    xnor_gemm,
+)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitops import PACK_BITS, PACKED_DTYPE, pad_packed_operands
+from repro.kernels import fused_gemm as fused_kernel
 from repro.kernels import pack as pack_kernel
 from repro.kernels import unpack_gemm as unpack_kernel
 from repro.kernels import xnor_gemm as xnor_kernel
@@ -77,6 +78,46 @@ def unpack_gemm(
     return out[:m, :n]
 
 
+def fused_xnor_gemm(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 16,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Padded, dispatching fused binary layer (DESIGN.md §4).
+
+    Packed [M, KW] x packed [KW, N] with per-row affine ``a, b [M]``
+    -> packed int32 [ceil(M/32), N]: the epilogue computes
+    ``sign(a*(2*popcount-k_bits) + b)`` and repacks along M in one
+    launch. ``k_bits`` is the TRUE contraction length; bit-level K pads
+    must be xnor-neutral (weight bits -1, activation bits +1). Output
+    rows past M inside the last word are +1 bits (the next layer's
+    weight-pad correction consumes them exactly).
+    """
+    if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed operands must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    m, kw = wp.shape
+    _, n = xp.shape
+    wp_p, xp_p, _, _ = pad_packed_operands(wp, xp, block_m, block_n, block_kw)
+    pm = wp_p.shape[0] - m
+    # padded output rows: a=0 kills the garbage dot, b=+1 pins the bit to 1.
+    a_p = jnp.pad(a.astype(jnp.float32), (0, pm))[:, None]
+    b_p = jnp.pad(b.astype(jnp.float32), (0, pm), constant_values=1.0)[:, None]
+    out = fused_kernel.fused_xnor_gemm(
+        wp_p, xp_p, k_bits, a_p, b_p,
+        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        interpret=interpret,
+    )
+    return out[: -(-m // PACK_BITS), :n]
+
+
 def pack_rows(
     x: jnp.ndarray,
     *,
@@ -101,4 +142,4 @@ def pack_rows(
     return out[:, :n]
 
 
-__all__ = ["xnor_gemm", "unpack_gemm", "pack_rows"]
+__all__ = ["xnor_gemm", "unpack_gemm", "pack_rows", "fused_xnor_gemm"]

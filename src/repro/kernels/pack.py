@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 from repro.core.bitops import PACK_BITS
 
 
@@ -47,7 +49,7 @@ def pack_rows(
         ],
         out_specs=pl.BlockSpec((block_kw, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((kw, n), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,0 +1,16 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in
+newer jax releases; resolve whichever this jax provides so the kernels
+import cleanly on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

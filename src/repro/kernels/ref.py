@@ -32,10 +32,24 @@ def pack_ref(x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     return pack_bits(x, axis=axis)
 
 
+def fused_layer_ref(
+    w_pm1: jnp.ndarray, x_pm1: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Ground truth for the fused layer, from ±1 floats: float GEMM ->
+    per-row affine -> sign -> pack along M (pad rows with +1 bits)."""
+    dot = binary_matmul_ref(w_pm1, x_pm1).astype(jnp.float32)
+    y = a[:, None].astype(jnp.float32) * dot + b[:, None].astype(jnp.float32)
+    pad = -y.shape[0] % PACK_BITS
+    if pad:
+        y = jnp.pad(y, ((0, pad), (0, 0)), constant_values=1.0)
+    return pack_bits(y, axis=0)
+
+
 __all__ = [
     "PACK_BITS",
     "binary_matmul_ref",
     "xnor_gemm_ref",
     "unpack_gemm_ref",
     "pack_ref",
+    "fused_layer_ref",
 ]

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 
 def _ssm_scan_kernel(dt_ref, xh_ref, b_ref, c_ref, a_ref, h0_ref,
                      y_ref, h_out_ref):
@@ -84,7 +86,7 @@ def ssm_scan_chunk(
             jax.ShapeDtypeStruct((b, c, di), jnp.float32),
             jax.ShapeDtypeStruct((b, di, ds), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

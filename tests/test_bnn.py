@@ -9,9 +9,11 @@ from repro.core.binarize import QuantMode
 from repro.core.bnn import (
     BNNConfig,
     bnn_apply,
+    bnn_apply_fused,
     bnn_loss,
     init_bnn_params,
     pack_bnn_params,
+    pack_bnn_params_fused,
 )
 from repro.data import DataConfig, synthetic_cifar_batches
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -47,6 +49,71 @@ def test_bnn_packed_inference_matches_simulation(params, images, engine):
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(want), atol=1e-2, rtol=1e-3
     )
+
+
+@pytest.mark.parametrize("engine", ["xla", "xnor"])
+def test_bnn_fused_matches_packed_bit_exact(params, images, engine):
+    """Tentpole invariant: the fused packed pipeline (packed int32
+    activations between binary layers, BN folded into the epilogue)
+    produces logits BIT-IDENTICAL to the unfused QuantMode.PACKED path."""
+    want = bnn_apply(
+        pack_bnn_params(params), images,
+        BNNConfig(mode=QuantMode.PACKED, engine="xla"),
+    )
+    got = bnn_apply_fused(pack_bnn_params_fused(params), images, engine=engine)
+    assert got.shape == want.shape == (images.shape[0], 10)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bnn_fused_engines_agree(params, images):
+    a = bnn_apply_fused(pack_bnn_params_fused(params), images, engine="xla")
+    b = bnn_apply_fused(pack_bnn_params_fused(params), images, engine="xnor")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bnn_fused_boundaries_are_packed(params):
+    """The fused pack drops every interior float boundary: interior
+    layers carry only (w_packed, a, b) — no float bias / BN dicts."""
+    fp = pack_bnn_params_fused(params)
+    for layer in fp["conv"][1:] + fp["fc"][:-1]:
+        assert set(layer) == {"w_packed", "a", "b"}, set(layer)
+        assert layer["w_packed"].dtype == jnp.int32
+    assert "b" in fp["fc"][-1]          # last FC keeps its float bias
+    assert "gamma" in fp["bn_fc_last"]  # ... and its separate BN
+
+
+def test_bnn_fused_matches_packed_with_trained_stats(params, images):
+    """Parity must also hold with non-trivial BN statistics (the fresh
+    init has gamma=1/beta=0/mean=0/var=1, where folded and unfolded BN
+    are algebraically identical ops) — perturb every BN param and bias
+    so the folded affine actually differs in op order."""
+    key = jax.random.PRNGKey(1234)
+    p = jax.tree_util.tree_map(lambda x: x, params)  # shallow-ish copy
+    def perturb(bn, k):
+        return {
+            "gamma": bn["gamma"] * (1 + 0.3 * jax.random.normal(jax.random.fold_in(k, 0), bn["gamma"].shape)),
+            "beta": 0.2 * jax.random.normal(jax.random.fold_in(k, 1), bn["beta"].shape),
+            "mean": 0.5 * jax.random.normal(jax.random.fold_in(k, 2), bn["mean"].shape),
+            "var": bn["var"] * jnp.exp(jax.random.normal(jax.random.fold_in(k, 3), bn["var"].shape)),
+        }
+    p = dict(p)
+    p["bn_conv"] = [perturb(bn, jax.random.fold_in(key, i))
+                    for i, bn in enumerate(p["bn_conv"])]
+    p["bn_fc"] = [perturb(bn, jax.random.fold_in(key, 100 + i))
+                  for i, bn in enumerate(p["bn_fc"])]
+    want = bnn_apply(
+        pack_bnn_params(p), images,
+        BNNConfig(mode=QuantMode.PACKED, engine="xla"),
+    )
+    got = bnn_apply_fused(pack_bnn_params_fused(p), images, engine="xla")
+    # Exact equality holds for this fixed seed. Caveat: the folded and
+    # unfolded BN are differently-associated f32 expressions, so a jax/
+    # XLA upgrade that re-fuses either one could flip a sign on a
+    # pre-activation within ~1 ulp of 0. If this ever fails with a
+    # HANDFUL of differing logits (not wholesale divergence), that is
+    # ulp-level sign noise, not a folding bug — relax to a small
+    # Hamming-distance bound rather than chasing bit parity.
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_bnn_packed_weights_32x_smaller(params):

@@ -4,8 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import bitops
 from repro.core.binarize import (
@@ -54,9 +52,9 @@ def test_xnor_popcount_matmul_blocked_equals_unblocked():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@settings(max_examples=30, deadline=None)
-@given(kw=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("kw,seed", [(1, 0), (3, 7), (8, 123)])
 def test_pack_unpack_identity(kw, seed):
+    # (hypothesis sweep of this invariant lives in test_properties.py)
     x = jax.random.normal(jax.random.PRNGKey(seed), (kw * 32, 5))
     signs = jnp.where(x >= 0, 1.0, -1.0)
     np.testing.assert_array_equal(

@@ -8,8 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import bitops
 from repro.kernels import ops, ref
@@ -108,58 +106,127 @@ def test_unpack_gemm_dtypes(dtype):
     )
 
 
-# --------------------------- property-based ---------------------------------
+# --------------------------- fused layer kernel -----------------------------
 
-@settings(max_examples=25, deadline=None)
-@given(
-    m=st.integers(1, 80),
-    kw=st.integers(1, 12),
-    n=st.integers(1, 80),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_xnor_gemm_property(m, kw, n, seed):
-    """For random packed operands of any shape, the kernel equals the
-    exact ±1 dot product (invariant: 2*popcount(xnor) - K)."""
-    k = kw * 32
-    key = jax.random.PRNGKey(seed)
+FUSED_SHAPES = [
+    (128, 256, 128),   # tile-aligned
+    (96, 320, 200),    # M/N not tile-aligned (M still a whole 3 words)
+    (10, 64, 7),       # tiny, M << 32
+    (257, 544, 130),   # everything unaligned
+]
+
+
+@pytest.mark.parametrize("m,k,n", FUSED_SHAPES)
+def test_fused_xnor_gemm_matches_float_truth(m, k, n):
+    key = jax.random.PRNGKey(m * 5 + k * 11 + n)
     wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
     xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
-    out = ops.xnor_gemm(
-        bitops.pack_bits(wb, -1), bitops.pack_bits(xb, 0), k, interpret=True
-    )
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    wp = bitops.pack_bits(wb, axis=-1)
+    xp = bitops.pack_bits(xb, axis=0)
+    out = ops.fused_xnor_gemm(wp, xp, k, a, b, interpret=True)
     np.testing.assert_array_equal(
-        np.asarray(out), np.asarray(ref.binary_matmul_ref(wb, xb))
+        np.asarray(out), np.asarray(ref.fused_layer_ref(wb, xb, a, b))
     )
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    kw=st.integers(1, 16),
-    n=st.integers(1, 50),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_pack_unpack_roundtrip_property(kw, n, seed):
-    k = kw * 32
-    x = _rand_pm1(jax.random.PRNGKey(seed), (k, n))
-    packed = bitops.pack_bits(x, axis=0)
-    rt = bitops.unpack_bits(packed, axis=0)
-    np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    m=st.integers(1, 40),
-    kw=st.integers(1, 8),
-    n=st.integers(1, 40),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_engines_agree_property(m, kw, n, seed):
-    """xnor and unpack engines compute the same binary contraction."""
-    k = kw * 32
-    key = jax.random.PRNGKey(seed)
+@pytest.mark.parametrize("m,k,n", FUSED_SHAPES)
+def test_fused_xnor_gemm_matches_xla_oracle(m, k, n):
+    """Pallas fused kernel vs the pure-XLA fused_xnor_layer oracle —
+    bit-exact (same int32 dot, same float op order in the epilogue)."""
+    key = jax.random.PRNGKey(m + 2 * k + 3 * n)
     wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
     xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
-    wp = bitops.pack_bits(wb, -1)
-    a = ops.xnor_gemm(wp, bitops.pack_bits(xb, 0), k, interpret=True)
-    b = ops.unpack_gemm(wp, xb, interpret=True)
-    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    wp = bitops.pack_bits(wb, axis=-1)
+    xp = bitops.pack_bits(xb, axis=0)
+    got = ops.fused_xnor_gemm(wp, xp, k, a, b, interpret=True)
+    want = bitops.fused_xnor_layer(wp, xp, k, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_xnor_gemm_odd_k_bitpad_convention():
+    """k_orig % 32 != 0: weight pad bits -1, activation pad bits +1
+    (xnor-neutral), k_bits = true K — no post-hoc correction needed."""
+    m, k_orig, n = 48, 100, 33
+    key = jax.random.PRNGKey(7)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k_orig))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k_orig, n))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    pad = -k_orig % 32
+    wp = bitops.pack_bits(
+        jnp.pad(wb, ((0, 0), (0, pad)), constant_values=-1.0), axis=-1
+    )
+    xp = bitops.pack_bits(
+        jnp.pad(xb, ((0, pad), (0, 0)), constant_values=1.0), axis=0
+    )
+    want = ref.fused_layer_ref(wb, xb, a, b)
+    got = ops.fused_xnor_gemm(wp, xp, k_orig, a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    oracle = bitops.fused_xnor_layer(wp, xp, k_orig, a, b)
+    np.testing.assert_array_equal(np.asarray(oracle), np.asarray(want))
+
+
+def test_fused_xnor_gemm_block_shape_invariance():
+    key = jax.random.PRNGKey(13)
+    m, k, n = 160, 640, 96
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    wp, xp = bitops.pack_bits(wb, -1), bitops.pack_bits(xb, 0)
+    want = ref.fused_layer_ref(wb, xb, a, b)
+    for bm, bn, bkw in [(128, 128, 16), (256, 128, 8), (32, 256, 32)]:
+        out = ops.fused_xnor_gemm(
+            wp, xp, k, a, b,
+            block_m=bm, block_n=bn, block_kw=bkw, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_fused_output_feeds_next_layer():
+    """The packed output of a fused layer (incl. +1 pad bits past M) is
+    directly consumable by the next layer's packed weights — a two-layer
+    odd-width chain matches plain float math end to end."""
+    b_sz, d0, d1, d2 = 5, 70, 50, 9   # every width odd / non-mult-of-32
+    key = jax.random.PRNGKey(99)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (b_sz, d0))
+    w1 = _rand_pm1(jax.random.fold_in(key, 1), (d1, d0))
+    w2 = _rand_pm1(jax.random.fold_in(key, 2), (d2, d1))
+    a1 = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (d1,))) + 0.1
+    b1 = jax.random.normal(jax.random.fold_in(key, 4), (d1,))
+    a2 = jnp.abs(jax.random.normal(jax.random.fold_in(key, 5), (d2,))) + 0.1
+    b2 = jax.random.normal(jax.random.fold_in(key, 6), (d2,))
+
+    # float reference: sign(x) -> dot -> affine -> sign -> dot -> affine
+    xb = jnp.where(x >= 0, 1.0, -1.0)
+    z1 = a1[None, :] * (xb @ w1.T) + b1[None, :]
+    want_bits = ref.fused_layer_ref(
+        w2, jnp.where(z1 >= 0, 1.0, -1.0).T, a2, b2
+    )  # [ceil(d2/32), b_sz]
+
+    def pack_w(w):
+        pad = -w.shape[1] % 32
+        return bitops.pack_bits(
+            jnp.pad(w, ((0, 0), (0, pad)), constant_values=-1.0), axis=-1
+        )
+
+    pad0 = -d0 % 32
+    xp = bitops.pack_bits(
+        jnp.pad(xb, ((0, 0), (0, pad0)), constant_values=1.0), axis=-1
+    ).T  # [KW0, B]
+    for engine in ["xla", "xnor"]:
+        if engine == "xnor":
+            h = ops.fused_xnor_gemm(pack_w(w1), xp, d0, a1, b1, interpret=True)
+            out = ops.fused_xnor_gemm(pack_w(w2), h, d1, a2, b2, interpret=True)
+        else:
+            h = bitops.fused_xnor_layer(pack_w(w1), xp, d0, a1, b1)
+            out = bitops.fused_xnor_layer(pack_w(w2), h, d1, a2, b2)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want_bits))
+
+
+# property-based sweeps of these kernels (hypothesis) live in
+# tests/test_properties.py behind pytest.importorskip("hypothesis").

@@ -10,12 +10,19 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is an *optional* test dependency (see requirements-test.txt);
+# without it the deterministic suite still collects and runs — only this
+# module is skipped.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bitops
 from repro.core.binarize import QuantMode
 from repro.core.layers import BitLinearConfig, bit_linear, pack_linear_params
 from repro.distributed import compression, sharding
+from repro.kernels import ops, ref
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -91,6 +98,94 @@ def test_compression_error_bounded(n, scale, seed):
     deq, err = compression.compress_decompress(g, jnp.zeros_like(g))
     step = float(jnp.max(jnp.abs(g))) / 127.0
     assert float(jnp.max(jnp.abs(err))) <= step * 0.5 + 1e-6
+
+
+def _rand_pm1(key, shape):
+    return jnp.where(jax.random.bernoulli(key, 0.5, shape), 1.0, -1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    kw=st.integers(1, 12),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xnor_gemm_property(m, kw, n, seed):
+    """For random packed operands of any shape, the kernel equals the
+    exact ±1 dot product (invariant: 2*popcount(xnor) - K)."""
+    k = kw * 32
+    key = jax.random.PRNGKey(seed)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    out = ops.xnor_gemm(
+        bitops.pack_bits(wb, -1), bitops.pack_bits(xb, 0), k, interpret=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.binary_matmul_ref(wb, xb))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kw=st.integers(1, 16),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip_property(kw, n, seed):
+    k = kw * 32
+    x = _rand_pm1(jax.random.PRNGKey(seed), (k, n))
+    packed = bitops.pack_bits(x, axis=0)
+    rt = bitops.unpack_bits(packed, axis=0)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    kw=st.integers(1, 8),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_engines_agree_property(m, kw, n, seed):
+    """xnor and unpack engines compute the same binary contraction."""
+    k = kw * 32
+    key = jax.random.PRNGKey(seed)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    wp = bitops.pack_bits(wb, -1)
+    a = ops.xnor_gemm(wp, bitops.pack_bits(xb, 0), k, interpret=True)
+    b = ops.unpack_gemm(wp, xb, interpret=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    kw=st.integers(1, 6),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_layer_matches_unfused_property(m, kw, n, seed):
+    """fused epilogue (affine+sign+repack) == unfused dot->affine->pack
+    for any shape, including M not divisible by 32."""
+    k = kw * 32
+    key = jax.random.PRNGKey(seed)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    wp = bitops.pack_bits(wb, -1)
+    xp = bitops.pack_bits(xb, 0)
+    got = bitops.fused_xnor_layer(wp, xp, k, a, b)
+    dot = ref.binary_matmul_ref(wb, xb).astype(jnp.float32)
+    y = a[:, None] * dot + b[:, None]
+    pad = -m % 32
+    if pad:
+        y = jnp.pad(y, ((0, pad), (0, 0)), constant_values=1.0)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(bitops.pack_bits(y, axis=0))
+    )
 
 
 class _ShapeMesh:
