@@ -1,0 +1,123 @@
+"""Direct packed-window conv vs the im2col fused chain: wall time,
+bit-identity, and per-layer HBM bytes.
+
+No TPU in this container, so wall-clock numbers are CPU/interpret
+measurements at validation scale (NOT a TPU perf claim); the per-layer
+traffic model is shape-derived and backend-independent (DESIGN.md §5):
+the direct kernel never writes the ``[N*OH*OW, kH*kW*CW]`` packed patch
+matrix to HBM, which the im2col path writes AND reads back per layer.
+Writes BENCH_direct_conv.json at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.direct_conv
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.fused_chain import _time
+from benchmarks.kernel_microbench import direct_conv_chain_traffic
+from repro.core.bnn import (
+    bnn_apply_fused,
+    init_bnn_params,
+    pack_bnn_params_fused,
+)
+
+BENCH_PATH = (
+    pathlib.Path(__file__).resolve().parent.parent / "BENCH_direct_conv.json"
+)
+
+
+def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = init_bnn_params(key)
+    images = jax.random.normal(jax.random.fold_in(key, 1), (batch, 32, 32, 3))
+    fused = pack_bnn_params_fused(params)
+
+    t_im2col, want = _time(
+        jax.jit(lambda p, x: bnn_apply_fused(p, x, engine="xla",
+                                             conv_impl="im2col")),
+        fused, images,
+    )
+    t_direct, got = _time(
+        jax.jit(lambda p, x: bnn_apply_fused(p, x, engine="xla",
+                                             conv_impl="direct")),
+        fused, images,
+    )
+    bit_identical = bool(jnp.all(got == want))
+
+    # Pallas interpret engine at tiny scale (interpreter is python-speed;
+    # this validates the direct kernel path end to end, not TPU perf).
+    small = images[:2]
+    t_im2col_xnor, w2 = _time(
+        lambda: bnn_apply_fused(fused, small, engine="xnor",
+                                conv_impl="im2col"),
+        repeats=1,
+    )
+    t_direct_xnor, g2 = _time(
+        lambda: bnn_apply_fused(fused, small, engine="xnor",
+                                conv_impl="direct"),
+        repeats=1,
+    )
+    bit_identical_xnor = bool(jnp.all(g2 == w2))
+
+    chain = direct_conv_chain_traffic(batch)
+    result = {
+        "batch": batch,
+        "wall_time_s": {
+            "im2col_fused_xla": t_im2col,
+            "direct_fused_xla": t_direct,
+            "speedup_xla": t_im2col / t_direct,
+            "im2col_fused_xnor_interpret_b2": t_im2col_xnor,
+            "direct_fused_xnor_interpret_b2": t_direct_xnor,
+            "speedup_xnor_interpret": t_im2col_xnor / t_direct_xnor,
+        },
+        "logits_bit_identical": {
+            "xla": bit_identical, "xnor": bit_identical_xnor
+        },
+        "traffic_model": {
+            name: (
+                row if name == "total" else {
+                    "im2col_fused_bytes": row["im2col_fused_bytes"],
+                    "direct_bytes": row["direct_bytes"],
+                    "patch_matrix_bytes": row["patch_matrix_bytes"],
+                    "bytes_ratio": row["bytes_ratio"],
+                }
+            )
+            for name, row in chain.items()
+        },
+        "note": (
+            "CPU-only numbers; wall times are XLA-fallback (full batch) "
+            "and Pallas-interpret (b2) measurements, not TPU perf. The "
+            "backend-independent claim is traffic_model: per conv layer "
+            "the direct path skips the packed patch-matrix write+read."
+        ),
+    }
+    if verbose:
+        wt = result["wall_time_s"]
+        print(f"im2col fused (xla) b{batch}: {wt['im2col_fused_xla']:.3f}s")
+        print(f"direct fused (xla) b{batch}: {wt['direct_fused_xla']:.3f}s "
+              f"({wt['speedup_xla']:.2f}x)")
+        print(f"im2col fused (xnor-interpret) b2: "
+              f"{wt['im2col_fused_xnor_interpret_b2']:.3f}s")
+        print(f"direct fused (xnor-interpret) b2: "
+              f"{wt['direct_fused_xnor_interpret_b2']:.3f}s "
+              f"({wt['speedup_xnor_interpret']:.2f}x)")
+        print(f"logits bit-identical: {result['logits_bit_identical']}")
+        t = chain["total"]
+        print(f"conv-layer HBM bytes: {t['im2col_fused_bytes']/1e6:.1f} MB "
+              f"(im2col) -> {t['direct_bytes']/1e6:.1f} MB (direct) "
+              f"({t['bytes_ratio']:.1f}x fewer)")
+    if write:
+        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
+        if verbose:
+            print(f"wrote {BENCH_PATH}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -49,6 +49,65 @@ def traffic_model(m: int, k: int, n: int) -> dict:
     }
 
 
+def conv_traffic_model(
+    n: int, h: int, w: int, c: int, d: int,
+    kh: int = 3, kw: int = 3, stride: int = 1, pad: int = 1,
+) -> dict:
+    """Per-conv-layer HBM bytes: im2col fused chain vs direct kernel.
+
+    Both paths read the channel-packed map and the packed filters and
+    write the packed output. The im2col path ADDITIONALLY writes the
+    packed patch matrix ``[N*OH*OW, kH*kW*ceil(C/32)]`` to HBM and reads
+    it back for the GEMM — a ~kH*kW/stride^2 blow-up over the map it was
+    gathered from. The direct kernel (DESIGN.md §5) gathers windows from
+    the VMEM-resident map, so that term vanishes.
+    """
+    cw = _ceil_div(c, 32)
+    dw = _ceil_div(d, 32)
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    map_bytes = n * h * w * cw * 4
+    patch_bytes = n * oh * ow * kh * kw * cw * 4
+    w_bytes = d * kh * kw * cw * 4
+    out_bytes = n * oh * ow * dw * 4
+    im2col = map_bytes + 2 * patch_bytes + w_bytes + out_bytes
+    direct = map_bytes + w_bytes + out_bytes
+    return {
+        "shape": {"n": n, "h": h, "w": w, "c": c, "d": d,
+                  "kh": kh, "kw": kw, "stride": stride, "pad": pad},
+        "map_bytes": map_bytes,
+        "patch_matrix_bytes": patch_bytes,
+        "weight_bytes": w_bytes,
+        "out_bytes": out_bytes,
+        "im2col_fused_bytes": im2col,
+        "direct_bytes": direct,
+        "bytes_ratio": im2col / direct,
+    }
+
+
+def direct_conv_chain_traffic(batch: int = 64) -> dict:
+    """conv_traffic_model over every interior binary conv of the CIFAR
+    BNN (first conv keeps its float boundary and is excluded), spatial
+    sizes tracked through the maxpools."""
+    from repro.core.bnn import CONV_CHANNELS, POOL_AFTER
+
+    out = {}
+    hw = 32
+    for i, (cin, cout) in enumerate(CONV_CHANNELS):
+        if i > 0:
+            out[f"conv{i}"] = conv_traffic_model(batch, hw, hw, cin, cout)
+        if i in POOL_AFTER:
+            hw //= 2
+    tot_i = sum(r["im2col_fused_bytes"] for r in out.values())
+    tot_d = sum(r["direct_bytes"] for r in out.values())
+    out["total"] = {
+        "im2col_fused_bytes": tot_i,
+        "direct_bytes": tot_d,
+        "bytes_ratio": tot_i / tot_d,
+    }
+    return out
+
+
 # The CIFAR BNN's binary conv/FC chain: (M=out_channels, K, N=pixels)
 # per interior binary layer at batch B, derived from the model's own
 # architecture constants so this never drifts from the network. First
@@ -120,6 +179,8 @@ def run(verbose: bool = True) -> dict:
 
     chain = fused_chain_traffic()
     out["fused_chain"] = chain
+    conv_chain = direct_conv_chain_traffic()
+    out["direct_conv_chain"] = conv_chain
     if verbose:
         print("fused packed chain (CIFAR BNN, batch 64) — boundary bytes:")
         for name, row in chain.items():
@@ -131,6 +192,19 @@ def run(verbose: bool = True) -> dict:
         print(f"  total  {chain['total']['unfused_bytes']/1e6:8.2f} MB -> "
               f"{chain['total']['fused_bytes']/1e6:.2f} MB "
               f"({chain['total']['bytes_ratio']:.1f}x fewer inter-layer bytes)")
+        print("direct vs im2col conv (CIFAR BNN, batch 64) — per-layer "
+              "HBM bytes:")
+        for name, row in conv_chain.items():
+            if name == "total":
+                continue
+            print(f"  {name:6s} im2col {row['im2col_fused_bytes']/1e6:8.2f} MB "
+                  f"direct {row['direct_bytes']/1e6:7.2f} MB "
+                  f"({row['bytes_ratio']:.1f}x — patch matrix "
+                  f"{row['patch_matrix_bytes']/1e6:.2f} MB skipped)")
+        t = conv_chain["total"]
+        print(f"  total  {t['im2col_fused_bytes']/1e6:8.2f} MB -> "
+              f"{t['direct_bytes']/1e6:.2f} MB "
+              f"({t['bytes_ratio']:.1f}x fewer conv-layer bytes)")
 
     # interpret-mode correctness-scale timing (NOT a TPU perf claim)
     rng = np.random.default_rng(0)

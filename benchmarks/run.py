@@ -33,6 +33,14 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("Direct conv — im2col vs packed-window (BENCH_direct_conv.json)")
+    print("=" * 72)
+    from benchmarks import direct_conv
+
+    direct_conv.run()
+
+    print()
+    print("=" * 72)
     print("Roofline table — (arch x shape x mesh) from the dry-run")
     print("=" * 72)
     from benchmarks import roofline_table

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Docs gate for CI: README.md must exist, and every intra-repo
+markdown link in the documentation set must resolve.
+
+Checked files: README.md, DESIGN.md, ROADMAP.md, CHANGES.md and every
+docs/*.md. A link is "intra-repo" when it is not an absolute URL
+(http/https/mailto) and not a pure fragment (#...). Targets are
+resolved relative to the file containing the link; a `path#anchor`
+link checks only the path part.
+
+  python scripts/check_docs_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excludes images' srcsets etc. well enough for our docs
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: pathlib.Path) -> list[pathlib.Path]:
+    docs = [root / n for n in ("README.md", "DESIGN.md", "ROADMAP.md",
+                               "CHANGES.md")]
+    docs += sorted((root / "docs").glob("*.md"))
+    return [d for d in docs if d.exists()]
+
+
+def check(root: pathlib.Path) -> list[str]:
+    errors = []
+    readme = root / "README.md"
+    if not readme.exists():
+        errors.append("README.md is missing at the repo root")
+    for doc in doc_files(root):
+        text = doc.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                line = text.count("\n", 0, m.start()) + 1
+                errors.append(
+                    f"{doc.relative_to(root)}:{line}: broken link "
+                    f"'{target}' (-> {resolved})"
+                )
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    errors = check(root)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(doc_files(root))} files, all intra-repo "
+              "links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

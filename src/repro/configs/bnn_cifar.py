@@ -20,6 +20,8 @@ class BNNExperiment:
 
 # paper Table 2 rows (our analogue, same-graph comparisons under XLA CPU)
 PAPER_KERNEL = BNNConfig(mode=QuantMode.PACKED, engine="xnor")     # "Our Kernel"
+DIRECT_KERNEL = BNNConfig(mode=QuantMode.PACKED, engine="xnor",    # DESIGN.md §5:
+                          conv_impl="direct")                      # no im2col
 MXU_KERNEL = BNNConfig(mode=QuantMode.PACKED, engine="unpack")     # beyond-paper
 XLA_PACKED = BNNConfig(mode=QuantMode.PACKED, engine="xla")        # SPMD engine
 CONTROL_GROUP = BNNConfig(mode=QuantMode.FLOAT)                    # "Control Group"

@@ -10,7 +10,10 @@ from repro.core.binarize import (  # noqa: F401
 from repro.core.bitops import (  # noqa: F401
     PACK_BITS,
     PACKED_DTYPE,
+    direct_conv_dot,
+    direct_conv_oracle,
     pack_bits,
+    pack_channels,
     packed_matmul_unpack,
     unpack_bits,
     xnor_popcount_matmul,
@@ -21,6 +24,7 @@ from repro.core.layers import (  # noqa: F401
     bit_linear,
     init_conv,
     init_linear,
+    pack_conv_aligned,
     pack_conv_params,
     pack_linear_params,
 )

@@ -30,12 +30,15 @@ __all__ = [
     "PACK_BITS",
     "PACKED_DTYPE",
     "pack_bits",
+    "pack_channels",
     "unpack_bits",
     "popcount",
     "xnor_popcount_matmul",
     "packed_matmul_unpack",
     "pad_packed_operands",
     "fused_xnor_layer",
+    "direct_conv_dot",
+    "direct_conv_oracle",
 ]
 
 
@@ -60,6 +63,23 @@ def pack_bits(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     bits = bits.reshape(*x.shape[:-1], k // PACK_BITS, PACK_BITS)
     words = jnp.sum(bits << _shift_vector(), axis=-1).astype(PACKED_DTYPE)
     return jnp.moveaxis(words, -1, axis)
+
+
+def pack_channels(x: jnp.ndarray, *, pad_value: float = 1.0) -> jnp.ndarray:
+    """Channel-pack ``[..., C]`` real values into ``[..., ceil(C/32)]`` words.
+
+    Unlike :func:`pack_bits` this tolerates ``C % 32 != 0``: the tail of
+    the last word is filled with the sign bit of ``pad_value`` — ``+1``
+    by default, the activation-pad half of the xnor-neutral convention
+    (tap-aligned packed weights carry ``-1`` there, see
+    ``repro.core.layers.pack_conv_aligned``).
+    """
+    c = x.shape[-1]
+    pad = -c % PACK_BITS
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths, constant_values=pad_value)
+    return pack_bits(x, axis=-1)
 
 
 def unpack_bits(words: jnp.ndarray, axis: int = -1, dtype=jnp.float32) -> jnp.ndarray:
@@ -164,6 +184,96 @@ def fused_xnor_layer(
     if pad:
         y = jnp.pad(y, ((0, pad), (0, 0)), constant_values=1.0)
     return pack_bits(y, axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_bits", "kh", "kw", "stride", "pad")
+)
+def direct_conv_dot(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+) -> jnp.ndarray:
+    """Direct binary convolution, pure XLA: the ±1 conv dot product
+    WITHOUT building the im2col patch matrix.
+
+    ``xp``: channel-packed activations ``[N, H, W, CW]`` (CW words per
+    pixel, tail bits +1 when C % 32 != 0 — see :func:`pack_channels`).
+    ``wp``: tap-aligned packed filters ``[D, kH*kW*CW]`` (word
+    ``(i*kW + j)*CW + cw`` holds tap ``(i, j)``'s channel word ``cw``;
+    ``repro.core.layers.pack_conv_aligned`` produces this, and it
+    coincides with the flat ``pack_conv_params`` layout when C % 32 == 0).
+
+    Spatial borders pad with all-ones words (``sign(0) := +1``). The
+    static loop runs over the kH*kW taps only; each tap contributes a
+    strided window slice of the map — the ``[N*OH*OW, kH*kW*CW]`` patch
+    matrix of the im2col lowering never exists. ``k_bits`` is the TRUE
+    contraction length kH*kW*C. Returns int32 ``[N, OH, OW, D]``.
+    """
+    from repro.core.im2col import conv_out_size
+
+    n, h, w, cw = xp.shape
+    d, kwords = wp.shape
+    if kwords != kh * kw * cw:
+        raise ValueError(
+            f"filter words {kwords} != kh*kw*CW = {kh}*{kw}*{cw} — direct "
+            "conv needs tap-aligned packed filters (pack_conv_aligned)"
+        )
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    if pad:
+        xp = jnp.pad(xp, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                     constant_values=-1)
+    wr = wp.reshape(d, kh * kw, cw)
+    acc = jnp.zeros((n, oh, ow, d), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            win = lax.slice(
+                xp,
+                (0, i, j, 0),
+                (n, i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, cw),
+                (1, stride, stride, 1),
+            )  # [N, OH, OW, CW]
+            tap = wr[:, i * kw + j, :]  # [D, CW]
+            xnor = ~(win[..., None, :] ^ tap[None, None, None, :, :])
+            acc = acc + jnp.sum(popcount(xnor).astype(jnp.int32), axis=-1)
+    return 2 * acc - jnp.int32(k_bits)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_bits", "kh", "kw", "stride", "pad")
+)
+def direct_conv_oracle(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+) -> jnp.ndarray:
+    """Whole fused direct-conv layer, pure XLA (the oracle for the
+    Pallas direct kernel, and the SPMD-safe fallback engine).
+
+    :func:`direct_conv_dot` then the PR-1 fused epilogue: per-output-
+    channel affine ``a*dot + b`` (folded BN/bias/alpha), sign, repack
+    along D (pad channels past D get +1 bits — the next layer's
+    activation-pad convention). Same int32 dot and same float op order
+    as ``fused_xnor_layer`` on im2col patches, so the two conv_impls
+    are bit-identical. Returns packed ``[N, OH, OW, ceil(D/32)]``.
+    """
+    dot = direct_conv_dot(wp, xp, k_bits, kh=kh, kw=kw, stride=stride,
+                          pad=pad)
+    y = a.astype(jnp.float32) * dot.astype(jnp.float32) + b.astype(jnp.float32)
+    return pack_channels(y)
 
 
 def pad_packed_operands(wp, xp, block_m, block_n, block_kw):

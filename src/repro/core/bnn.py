@@ -61,6 +61,7 @@ FC_SIZES = [(512 * 4 * 4, 1024), (1024, 1024), (1024, 10)]
 class BNNConfig:
     mode: QuantMode = QuantMode.FAKE_QUANT
     engine: str = "xnor"
+    conv_impl: str = "im2col"  # "im2col" | "direct" (PACKED convs only)
     use_scale: bool = False
     num_classes: int = 10
 
@@ -68,6 +69,7 @@ class BNNConfig:
         return BitLinearConfig(
             mode=self.mode,
             engine=self.engine,
+            conv_impl=self.conv_impl,
             use_scale=self.use_scale,
             binarize_acts=binarize_acts,
         )
@@ -220,6 +222,7 @@ def bnn_apply_fused(
     images: jnp.ndarray,
     *,
     engine: str = "xnor",
+    conv_impl: str = "im2col",
     use_scale: bool = False,
 ) -> jnp.ndarray:
     """Fused packed inference: layer boundaries carry PACKED int32 words.
@@ -233,6 +236,10 @@ def bnn_apply_fused(
     boundary HBM traffic, DESIGN.md §4). ``packed`` comes from
     :func:`pack_bnn_params_fused`; ``engine`` is "xnor" (Pallas fused
     kernel) or "xla" (``bitops.fused_xnor_layer``, SPMD-safe).
+    ``conv_impl`` picks the conv lowering for the interior binary convs:
+    ``"im2col"`` (patch-matrix GEMM) or ``"direct"`` (packed-window
+    kernel, no patch matrix in HBM — DESIGN.md §5); logits are
+    bit-identical across all engine x conv_impl combinations.
     """
     # First conv keeps its float boundary (real-valued images), exactly
     # as in the unfused packed path; its BN output is then binarized and
@@ -249,6 +256,7 @@ def bnn_apply_fused(
         xp = fused_bit_conv2d(
             packed["conv"][i], xp, 3 * 3 * c_in,
             kh=3, kw=3, stride=1, pad=1, engine=engine,
+            conv_impl=conv_impl,
         )
         if i in POOL_AFTER:
             xp = _maxpool2_packed(xp)

@@ -1,10 +1,25 @@
 """im2col / col2im — the paper's §2.1 convolution lowering, in JAX.
 
-Layout convention (paper Figure 1): a conv between input feature map
-``[N, H, W, C]`` and filters ``[D, kH, kW, C]`` becomes a GEMM between
-the filter matrix ``[D, kH*kW*C]`` and the patch matrix
-``[kH*kW*C, N*OH*OW]``. Row index ``(h*kW + w)*C + c`` — the same
-ordering ``filters_to_matrix`` uses, so the two always agree.
+Layout convention — THE single source of truth for patch shapes:
+
+Paper Figure 1 draws the GEMM as filter matrix ``[D, kH*kW*C]`` times
+patch matrix ``[kH*kW*C, N*OH*OW]``. This module does NOT return that
+orientation: :func:`im2col` returns batch-major patches
+``[N, OH*OW, kH*kW*C]`` (patch-index leading), which is the natural
+layout for XLA to fuse the window slices and for reshaping back through
+:func:`col2im`. The paper's orientation appears only at the GEMM call
+site: executors in ``repro.core.layers`` flatten to
+``x2d = patches.reshape(N*OH*OW, kH*kW*C)`` and transpose THERE
+(``x2d.T``) when a kernel wants the ``[K, N*OH*OW]`` operand — that
+``.T`` is the one and only transpose point between this module and the
+paper's Figure 1.
+
+Within a patch, element index is ``(h*kW + w)*C + c`` — the same
+ordering ``filters_to_matrix`` uses, so the two always agree. The same
+function handles channel-packed ``int32`` maps (``C`` word columns,
+``pad_value=-1``): word index within a patch is then
+``(h*kW + w)*CW + cw``, the tap-aligned filter layout of
+``repro.core.layers.pack_conv_aligned``.
 """
 
 from __future__ import annotations
@@ -18,7 +33,9 @@ def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
 
 def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0,
            pad_value=0):
-    """[N, H, W, C] -> patches [N, OH*OW, kH*kW*C].
+    """[N, H, W, C] -> patches [N, OH*OW, kH*kW*C] (see module docstring
+    for how this maps onto the paper's [kH*kW*C, N*OH*OW] Figure 1
+    orientation — callers transpose at the GEMM, not here).
 
     Static python loop over the (small) kernel window keeps the ordering
     explicit and lets XLA fuse the slices. ``pad_value`` is the border

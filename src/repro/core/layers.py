@@ -36,6 +36,7 @@ class BitLinearConfig:
     binarize_acts: bool = True          # False => weight-only (LM serving)
     use_scale: bool = False             # XNOR-Net alpha (beyond-paper)
     engine: str = "xla"                 # "xnor" | "unpack" | "xla"
+    conv_impl: str = "im2col"           # "im2col" | "direct" (PACKED convs)
     compute_dtype: object = jnp.float32
 
 
@@ -221,14 +222,35 @@ def fused_bit_conv2d(
     stride: int = 1,
     pad: int = 0,
     engine: str = "xnor",
+    conv_impl: str = "im2col",
 ) -> jnp.ndarray:
     """Fused binary conv: channel-packed maps in, channel-packed maps out.
 
-    xp: [N, H, W, C/32] int32 (C must be a multiple of 32 so the packed
-    im2col word order matches the packed-weight word order). Spatial
+    xp: [N, H, W, CW] int32 channel-packed words (CW = ceil(C/32); for
+    C % 32 != 0 the tail bits must be +1 and the filters packed
+    tap-aligned, see :func:`pack_conv_aligned` — with C % 32 == 0 the
+    flat ``pack_conv_params`` layout is already tap-aligned). Spatial
     borders pad with all-ones words — the packed image of "zero-pad then
     sign" since sign(0) := +1. Returns [N, OH, OW, ceil(D/32)].
+
+    ``conv_impl="im2col"`` lowers to the patch-matrix GEMM (paper §2.1);
+    ``"direct"`` convolves the packed map in place (DESIGN.md §5) — the
+    two are bit-identical on both engines.
     """
+    if conv_impl == "direct":
+        if engine == "xnor":
+            return kops.fused_direct_conv(
+                packed["w_packed"], xp, k_orig, packed["a"], packed["b"],
+                kh=kh, kw=kw, stride=stride, pad=pad,
+            )
+        if engine == "xla":
+            return bitops.direct_conv_oracle(
+                packed["w_packed"], xp, k_orig, packed["a"], packed["b"],
+                kh=kh, kw=kw, stride=stride, pad=pad,
+            )
+        raise ValueError(f"direct conv has no engine {engine!r}")
+    if conv_impl != "im2col":
+        raise ValueError(f"unknown conv_impl {conv_impl!r}")
     patches, (oh, ow) = im2col(
         xp, kh, kw, stride=stride, pad=pad, pad_value=jnp.int32(-1)
     )
@@ -297,6 +319,75 @@ def pack_conv_params(params: dict, *, use_scale: bool = False) -> dict:
     return packed
 
 
+def _direct_bit_conv2d(params, x, cfg, *, kh, kw, stride, pad):
+    """PACKED conv without the im2col lowering (``conv_impl="direct"``).
+
+    Binarizes + channel-packs the input ONCE (``[N, H, W, C/32]``) and
+    convolves the packed map directly — the ``[N*OH*OW, kH*kW*C]`` patch
+    matrix of the im2col path never exists. Requires C % 32 == 0 so the
+    flat ``pack_conv_params`` filter layout coincides with the
+    tap-aligned one the window gather walks (for ragged C, pack with
+    :func:`pack_conv_aligned` and call the fused executor directly).
+    """
+    c = x.shape[-1]
+    if c % bitops.PACK_BITS != 0:
+        raise ValueError(
+            f"conv_impl='direct' via bit_conv2d needs C % 32 == 0, got "
+            f"C={c}; use conv_impl='im2col' (or pack_conv_aligned + "
+            "fused_bit_conv2d)"
+        )
+    if cfg.engine not in ("xnor", "xla"):
+        raise ValueError(
+            f"conv_impl='direct' has no engine {cfg.engine!r} "
+            "(packed-activation path: 'xnor' | 'xla')"
+        )
+    xp = bitops.pack_bits(jnp.clip(x, -1, 1), axis=-1)
+    k_orig = kh * kw * c
+    if cfg.engine == "xnor":
+        dot = kops.direct_conv(
+            params["w_packed"], xp, k_orig, kh=kh, kw=kw, stride=stride,
+            pad=pad,
+        )
+    else:
+        dot = bitops.direct_conv_dot(
+            params["w_packed"], xp, k_orig, kh=kh, kw=kw, stride=stride,
+            pad=pad,
+        )
+    y = dot.astype(cfg.compute_dtype)
+    if "alpha" in params:
+        y = y * params["alpha"].astype(y.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def pack_conv_aligned(params: dict, *, use_scale: bool = False) -> dict:
+    """Tap-aligned variant of :func:`pack_conv_params` for C % 32 != 0.
+
+    Each tap's channel block is padded to whole words with -1 weights
+    BEFORE packing, so filter word ``(h*kW + w)*ceil(C/32) + cw`` lines
+    up with the channel-packed activation words of
+    :func:`repro.core.bitops.pack_channels` (tail bits +1 — the pad
+    pairs are xnor-neutral, so kernels still take the TRUE
+    ``k_bits = kH*kW*C``). Identical to :func:`pack_conv_params` when
+    C % 32 == 0. This is the layout the direct-conv kernels and the
+    packed-im2col path both consume.
+    """
+    w = params["w"]  # [D, kH, kW, C]
+    d, _, _, c = w.shape
+    pad = -c % bitops.PACK_BITS
+    wm = (
+        jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad)), constant_values=-1.0)
+        if pad else w
+    )
+    packed = {"w_packed": bitops.pack_bits(wm.reshape(d, -1), axis=-1)}
+    if use_scale:
+        packed["alpha"] = jnp.mean(jnp.abs(w.reshape(d, -1)), axis=-1)
+    if "b" in params:
+        packed["b"] = params["b"]
+    return packed
+
+
 def bit_conv2d(
     params: dict,
     x: jnp.ndarray,
@@ -307,12 +398,18 @@ def bit_conv2d(
     kh: Optional[int] = None,
     kw: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Conv via the paper's forward graph: im2col -> GEMM -> (+bias) -> col2im.
+    """Conv via the paper's forward graph: im2col -> GEMM -> (+bias) -> col2im
+    (``cfg.conv_impl="im2col"``), or the direct packed-window kernel that
+    skips the patch matrix (``"direct"``, PACKED mode only).
 
     x: [N, H, W, C]. Returns [N, OH, OW, D].
     """
     if cfg.mode == QuantMode.PACKED:
         assert kh is not None and kw is not None
+        if cfg.conv_impl == "direct":
+            return _direct_bit_conv2d(
+                params, x, cfg, kh=kh, kw=kw, stride=stride, pad=pad
+            )
         wp = params["w_packed"]
     else:
         w = params["w"]

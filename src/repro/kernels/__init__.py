@@ -1,16 +1,21 @@
 """Pallas TPU kernels for 1-bit xnor/bitcount computation.
 
-``xnor_gemm``       — paper-faithful packed xnor-popcount GEMM (VPU).
-``unpack_gemm``     — TPU-native packed-weight MXU GEMM (beyond-paper).
-``pack_rows``       — the paper's encoding operation as a kernel.
-``fused_xnor_gemm`` — xnor GEMM + BN-fold/sign/repack epilogue: packed
-                      activations in AND out (DESIGN.md §4).
+``xnor_gemm``         — paper-faithful packed xnor-popcount GEMM (VPU).
+``unpack_gemm``       — TPU-native packed-weight MXU GEMM (beyond-paper).
+``pack_rows``         — the paper's encoding operation as a kernel.
+``fused_xnor_gemm``   — xnor GEMM + BN-fold/sign/repack epilogue: packed
+                        activations in AND out (DESIGN.md §4).
+``fused_direct_conv`` — direct packed-window conv + the same epilogue:
+                        no im2col patch matrix in HBM (DESIGN.md §5).
+``direct_conv``       — epilogue-free direct conv (int32 ±1 dot out).
 
 Import the padded/dispatching wrappers from :mod:`repro.kernels.ops`;
-oracles live in :mod:`repro.kernels.ref`.
+oracles live in :mod:`repro.kernels.ref` and :mod:`repro.core.bitops`.
 """
 
 from repro.kernels.ops import (  # noqa: F401
+    direct_conv,
+    fused_direct_conv,
     fused_xnor_gemm,
     pack_rows,
     unpack_gemm,

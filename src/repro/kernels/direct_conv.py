@@ -1,0 +1,219 @@
+"""Direct packed-window binary conv Pallas kernel — no im2col
+materialization (DESIGN.md §5).
+
+The fused im2col path (PR 1) still writes the packed patch matrix
+``[N*OH*OW, kH*kW*CW]`` to HBM before each GEMM — ~kH*kW times larger
+than the packed activation map it was gathered from. This kernel
+convolves the channel-packed map directly: the grid tiles the output
+pixel space ``(N, OH)`` x output channels ``D``, each program holds the
+whole (pre-padded) packed image ``[Hp, Wp, CW]`` in VMEM, gathers its
+kH*kW window rows with strided in-VMEM slices, runs the xnor-popcount
+accumulation against the tap-aligned packed filter tile, and finishes
+with the PR-1 fused epilogue (folded-BN affine -> sign -> repack along
+D). HBM sees: the packed map (read), the packed filters (read), the
+packed output (write). The patch matrix never exists.
+
+Two variants share the window gather:
+
+* ``fused_direct_conv`` — full fused layer, packed words in AND out,
+* ``direct_conv_dot``   — epilogue-free int32 ±1 dot ``[N,OH,OW,D]``
+                          (the chain-boundary / unfused-PACKED variant).
+
+VMEM budget per grid step (CIFAR BNN worst case, block_d=128):
+  x map     1*34*34*16*4  =  72 KiB   (conv5: Hp=Wp=10 -> 6 KiB)
+  w tile    128*144*4     =  72 KiB   (KW = 9*16 words max)
+  a, b      128*1*4 x2    =   1 KiB
+  xnor      128*32*144*4  = 2304 KiB  (broadcast over [bd, OW, KW])
+  out       32*4*4        = 0.5 KiB
+~2.4 MiB of ~16 MiB VMEM. The map block is revisited across the OH and
+D grid axes (same block index), so the pipeline fetches it once per
+image. When the packed map itself outgrows VMEM (or kH*kW is large and
+C tiny, so the patch blow-up the kernel avoids is small), fall back to
+``conv_impl="im2col"`` — the GEMM tiles arbitrarily large operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.bitops import PACK_BITS
+from repro.kernels import pallas_compat
+
+
+def _gather_windows(x_ref, oh_idx, *, kh: int, kw: int, stride: int, ow: int):
+    """Gather one output row's windows from the padded map in VMEM.
+
+    x_ref: [1, Hp, Wp, CW]. Returns [OW, kH*kW*CW] int32 — tap-major
+    word order (i*kW + j)*CW + cw, matching pack_conv_aligned rows.
+    """
+    cw = x_ref.shape[-1]
+    taps = []
+    for i in range(kh):
+        row = x_ref[0, pl.ds(oh_idx * stride + i, 1)][0]  # [Wp, CW]
+        for j in range(kw):
+            taps.append(
+                lax.slice(row, (j, 0), (j + stride * (ow - 1) + 1, cw),
+                          (stride, 1))
+            )  # [OW, CW]
+    return jnp.concatenate(taps, axis=-1)
+
+
+def _popcount_dot(w, xmat, k_bits: int):
+    """w [bd, KW] x xmat [OW, KW] -> exact ±1 dot, int32 [bd, OW]."""
+    xnor = ~(w[:, None, :] ^ xmat[None, :, :])  # [bd, OW, KW]
+    pc = lax.population_count(xnor).astype(jnp.int32)
+    return 2 * jnp.sum(pc, axis=-1) - jnp.int32(k_bits)
+
+
+def _fused_direct_conv_kernel(
+    x_ref, w_ref, a_ref, b_ref, o_ref, *,
+    kh: int, kw: int, stride: int, ow: int, k_bits: int,
+):
+    xmat = _gather_windows(x_ref, pl.program_id(1), kh=kh, kw=kw,
+                           stride=stride, ow=ow)
+    dot = _popcount_dot(w_ref[...], xmat, k_bits)
+    # Same float op order as bitops.direct_conv_oracle / fused_xnor_layer
+    # so every conv_impl x engine pair is bit-exact vs the others.
+    y = a_ref[...] * dot.astype(jnp.float32) + b_ref[...]  # [bd, OW]
+    bd = y.shape[0]
+    bits = (y >= 0).astype(jnp.int32)
+    bits = bits.reshape(bd // PACK_BITS, PACK_BITS, ow)
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.int32)
+    words = jnp.sum(bits << shifts[None, :, None], axis=1)  # [bd/32, OW]
+    o_ref[...] = words.T[None, None]  # [1, 1, OW, bd/32]
+
+
+def _direct_conv_dot_kernel(
+    x_ref, w_ref, o_ref, *,
+    kh: int, kw: int, stride: int, ow: int, k_bits: int,
+):
+    xmat = _gather_windows(x_ref, pl.program_id(1), kh=kh, kw=kw,
+                           stride=stride, ow=ow)
+    dot = _popcount_dot(w_ref[...], xmat, k_bits)
+    o_ref[...] = dot.T[None, None]  # [1, 1, OW, bd]
+
+
+def _grid_and_specs(n, hp, wp_sp, cw, oh, ow, d_pad, block_d, kwords):
+    grid = (n, oh, d_pad // block_d)
+    x_spec = pl.BlockSpec((1, hp, wp_sp, cw), lambda ni, oi, di: (ni, 0, 0, 0))
+    w_spec = pl.BlockSpec((block_d, kwords), lambda ni, oi, di: (di, 0))
+    return grid, x_spec, w_spec
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_bits", "kh", "kw", "stride", "block_d", "interpret"),
+)
+def fused_direct_conv(
+    wp: jnp.ndarray,
+    xpad: jnp.ndarray,
+    k_bits: int,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Packed map [N, Hp, Wp, CW] x tap-aligned filters [D_pad, kH*kW*CW]
+    -> PACKED int32 [N, OH, OW, D_pad/32].
+
+    ``xpad`` must already carry its spatial all-ones border (the wrapper
+    ``repro.kernels.ops.fused_direct_conv`` pads); ``a``/``b``
+    ``[D_pad, 1]`` f32 per-output-channel affine, rows past the true D
+    padded ``a=0, b=+1`` to pin their bits. ``block_d`` must divide by
+    32 so each tile repacks to whole words.
+    """
+    n, hp, wp_sp, cw = xpad.shape
+    d_pad, kwords = wp.shape
+    assert kwords == kh * kw * cw, (wp.shape, kh, kw, cw)
+    assert block_d % PACK_BITS == 0 and d_pad % block_d == 0, (d_pad, block_d)
+    assert a.shape == (d_pad, 1) and b.shape == (d_pad, 1), (a.shape, b.shape)
+    oh = (hp - kh) // stride + 1
+    ow = (wp_sp - kw) // stride + 1
+
+    kernel = functools.partial(
+        _fused_direct_conv_kernel, kh=kh, kw=kw, stride=stride, ow=ow,
+        k_bits=k_bits,
+    )
+    grid, x_spec, w_spec = _grid_and_specs(
+        n, hp, wp_sp, cw, oh, ow, d_pad, block_d, kwords
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            x_spec,
+            w_spec,
+            pl.BlockSpec((block_d, 1), lambda ni, oi, di: (di, 0)),
+            pl.BlockSpec((block_d, 1), lambda ni, oi, di: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, ow, block_d // PACK_BITS),
+            lambda ni, oi, di: (ni, oi, 0, di),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, oh, ow, d_pad // PACK_BITS), jnp.int32
+        ),
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(xpad, wp, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_bits", "kh", "kw", "stride", "block_d", "interpret"),
+)
+def direct_conv_dot(
+    wp: jnp.ndarray,
+    xpad: jnp.ndarray,
+    k_bits: int,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Epilogue-free variant: int32 ±1 dot [N, OH, OW, D_pad].
+
+    Same gather + popcount pipeline as :func:`fused_direct_conv`; used
+    by the unfused PACKED path (bias/alpha/BN applied by the caller in
+    float). Padded D rows produce garbage the wrapper slices off.
+    """
+    n, hp, wp_sp, cw = xpad.shape
+    d_pad, kwords = wp.shape
+    assert kwords == kh * kw * cw, (wp.shape, kh, kw, cw)
+    assert d_pad % block_d == 0, (d_pad, block_d)
+    oh = (hp - kh) // stride + 1
+    ow = (wp_sp - kw) // stride + 1
+
+    kernel = functools.partial(
+        _direct_conv_dot_kernel, kh=kh, kw=kw, stride=stride, ow=ow,
+        k_bits=k_bits,
+    )
+    grid, x_spec, w_spec = _grid_and_specs(
+        n, hp, wp_sp, cw, oh, ow, d_pad, block_d, kwords
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec],
+        out_specs=pl.BlockSpec(
+            (1, 1, ow, block_d), lambda ni, oi, di: (ni, oi, 0, di)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, d_pad), jnp.int32),
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(xpad, wp)

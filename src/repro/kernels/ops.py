@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitops import PACK_BITS, PACKED_DTYPE, pad_packed_operands
+from repro.kernels import direct_conv as direct_kernel
 from repro.kernels import fused_gemm as fused_kernel
 from repro.kernels import pack as pack_kernel
 from repro.kernels import unpack_gemm as unpack_kernel
@@ -118,6 +119,90 @@ def fused_xnor_gemm(
     return out[: -(-m // PACK_BITS), :n]
 
 
+def _pad_direct_conv_operands(wp, xp, pad: int, block_d: int):
+    """Spatial all-ones border + D padding for the direct-conv kernels.
+
+    Returns (wp_p, xpad, d, block_d): ``block_d`` is shrunk to the
+    padded-D extent for small layers so test-scale calls don't tile a
+    128-row block for a 10-channel conv.
+    """
+    d = wp.shape[0]
+    if pad:
+        xp = jnp.pad(xp, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                     constant_values=-1)
+    block_d = min(block_d, -(-d // PACK_BITS) * PACK_BITS)
+    pd = -d % block_d
+    wp_p = jnp.pad(wp, ((0, pd), (0, 0))) if pd else wp
+    return wp_p, xp, d, block_d
+
+
+def fused_direct_conv(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    block_d: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Padded, dispatching fused direct conv (DESIGN.md §5).
+
+    Channel-packed map ``[N, H, W, CW]`` x tap-aligned packed filters
+    ``[D, kH*kW*CW]`` with per-output-channel affine ``a, b [D]`` ->
+    packed ``[N, OH, OW, ceil(D/32)]``: window gather straight from the
+    map in VMEM, xnor-popcount, ``sign(a*dot + b)``, repack along D —
+    the im2col patch matrix never reaches HBM. Spatial borders pad with
+    all-ones words; rows past the true D get ``a=0, b=+1`` pinning their
+    bits to the activation-pad convention, as in ``fused_xnor_gemm``.
+    """
+    if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed operands must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    wp_p, xpad, d, block_d = _pad_direct_conv_operands(wp, xp, pad, block_d)
+    pd = wp_p.shape[0] - d
+    a_p = jnp.pad(a.astype(jnp.float32), (0, pd))[:, None]
+    b_p = jnp.pad(b.astype(jnp.float32), (0, pd), constant_values=1.0)[:, None]
+    out = direct_kernel.fused_direct_conv(
+        wp_p, xpad, k_bits, a_p, b_p,
+        kh=kh, kw=kw, stride=stride, block_d=block_d, interpret=interpret,
+    )
+    return out[..., : -(-d // PACK_BITS)]
+
+
+def direct_conv(
+    wp: jnp.ndarray,
+    xp: jnp.ndarray,
+    k_bits: int,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    block_d: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Padded, dispatching direct-conv ±1 dot: int32 ``[N, OH, OW, D]``.
+
+    The epilogue-free sibling of :func:`fused_direct_conv` for float-
+    boundary call sites (unfused PACKED conv): bias/alpha/BN stay with
+    the caller. Same operands and window-gather pipeline.
+    """
+    if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed operands must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    wp_p, xpad, d, block_d = _pad_direct_conv_operands(wp, xp, pad, block_d)
+    out = direct_kernel.direct_conv_dot(
+        wp_p, xpad, k_bits,
+        kh=kh, kw=kw, stride=stride, block_d=block_d, interpret=interpret,
+    )
+    return out[..., :d]
+
+
 def pack_rows(
     x: jnp.ndarray,
     *,
@@ -142,4 +227,11 @@ def pack_rows(
     return out[:, :n]
 
 
-__all__ = ["xnor_gemm", "unpack_gemm", "pack_rows", "fused_xnor_gemm"]
+__all__ = [
+    "xnor_gemm",
+    "unpack_gemm",
+    "pack_rows",
+    "fused_xnor_gemm",
+    "fused_direct_conv",
+    "direct_conv",
+]

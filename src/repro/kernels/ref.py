@@ -45,6 +45,51 @@ def fused_layer_ref(
     return pack_bits(y, axis=0)
 
 
+def conv2d_pm1_ref(
+    w_pm1: jnp.ndarray, x_pm1: jnp.ndarray, *, stride: int = 1, pad: int = 0
+) -> jnp.ndarray:
+    """Ground truth for the binary convs, from ±1 floats: im2col + float
+    GEMM, int32 [N, OH, OW, D]. Borders pad with +1 — the binarized
+    image of zero-padding, since sign(0) := +1.
+
+    w_pm1: [D, kH, kW, C] ±1 filters; x_pm1: [N, H, W, C] ±1 values.
+    """
+    from repro.core.im2col import col2im, filters_to_matrix, im2col
+
+    d, kh, kw, _ = w_pm1.shape
+    patches, (oh, ow) = im2col(
+        x_pm1.astype(jnp.float32), kh, kw, stride=stride, pad=pad,
+        pad_value=1.0,
+    )
+    y = jnp.einsum(
+        "npk,dk->npd", patches, filters_to_matrix(w_pm1).astype(jnp.float32)
+    )
+    return col2im(y, oh, ow).astype(jnp.int32)
+
+
+def fused_direct_conv_ref(
+    w_pm1: jnp.ndarray,
+    x_pm1: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+) -> jnp.ndarray:
+    """Ground truth for the fused direct conv: ±1 conv -> per-output-
+    channel affine -> sign -> pack along D (pad channels +1 bits).
+    Returns packed int32 [N, OH, OW, ceil(D/32)]."""
+    dot = conv2d_pm1_ref(w_pm1, x_pm1, stride=stride, pad=pad)
+    y = (a.astype(jnp.float32) * dot.astype(jnp.float32)
+         + b.astype(jnp.float32))
+    padd = -y.shape[-1] % PACK_BITS
+    if padd:
+        y = jnp.pad(
+            y, [(0, 0)] * (y.ndim - 1) + [(0, padd)], constant_values=1.0
+        )
+    return pack_bits(y, axis=-1)
+
+
 __all__ = [
     "PACK_BITS",
     "binary_matmul_ref",
@@ -52,4 +97,6 @@ __all__ = [
     "unpack_gemm_ref",
     "pack_ref",
     "fused_layer_ref",
+    "conv2d_pm1_ref",
+    "fused_direct_conv_ref",
 ]

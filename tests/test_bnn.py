@@ -65,6 +65,34 @@ def test_bnn_fused_matches_packed_bit_exact(params, images, engine):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("engine", ["xla", "xnor"])
+def test_bnn_fused_direct_conv_matches_im2col(params, images, engine):
+    """Direct-conv tentpole invariant: the packed-window conv kernel
+    (no im2col patch matrix in HBM) produces logits BIT-IDENTICAL to
+    the im2col fused chain on both engines."""
+    fused = pack_bnn_params_fused(params)
+    imgs = images if engine == "xla" else images[:2]
+    want = bnn_apply_fused(fused, imgs, engine=engine, conv_impl="im2col")
+    got = bnn_apply_fused(fused, imgs, engine=engine, conv_impl="direct")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bnn_unfused_direct_conv_matches_packed(params, images):
+    """conv_impl='direct' on the UNFUSED packed path (float layer
+    boundaries, epilogue-free direct kernel) agrees with the im2col
+    packed path."""
+    packed = pack_bnn_params(params)
+    want = bnn_apply(packed, images,
+                     BNNConfig(mode=QuantMode.PACKED, engine="xla"))
+    got = bnn_apply(
+        packed, images,
+        BNNConfig(mode=QuantMode.PACKED, engine="xla", conv_impl="direct"),
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-2, rtol=1e-3
+    )
+
+
 def test_bnn_fused_engines_agree(params, images):
     a = bnn_apply_fused(pack_bnn_params_fused(params), images, engine="xla")
     b = bnn_apply_fused(pack_bnn_params_fused(params), images, engine="xnor")

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import bitops
+from repro.core import bitops, layers
 from repro.kernels import ops, ref
 
 jax.config.update("jax_enable_x64", False)
@@ -226,6 +226,124 @@ def test_fused_output_feeds_next_layer():
             h = bitops.fused_xnor_layer(pack_w(w1), xp, d0, a1, b1)
             out = bitops.fused_xnor_layer(pack_w(w2), h, d1, a2, b2)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(want_bits))
+
+
+# ------------------------- direct conv kernel -------------------------------
+
+# (n, h, w, c, d, kh, kw, stride, pad) — sweeps strided, padded, ragged
+# C (tail-word masking) and ragged D (packed-output tail) geometries.
+CONV_SHAPES = [
+    (2, 8, 8, 32, 16, 3, 3, 1, 1),     # aligned C, the BNN's conv shape
+    (1, 6, 7, 64, 33, 3, 3, 2, 1),     # stride 2, ragged D
+    (2, 9, 9, 40, 10, 3, 3, 1, 0),     # C % 32 != 0: tail-word masking
+    (1, 5, 5, 32, 7, 1, 1, 1, 0),      # 1x1 conv degenerate window
+    (2, 10, 10, 48, 20, 5, 5, 2, 2),   # big window, stride 2, ragged C
+]
+
+
+def _rand_conv_case(n, h, w, c, d, kh, kw):
+    key = jax.random.PRNGKey(n * 31 + h * 7 + c + d + kh)
+    x = _rand_pm1(jax.random.fold_in(key, 0), (n, h, w, c))
+    wt = _rand_pm1(jax.random.fold_in(key, 1), (d, kh, kw, c))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (d,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (d,))
+    wp = layers.pack_conv_aligned({"w": wt})["w_packed"]
+    xp = bitops.pack_channels(x)
+    return x, wt, a, b, wp, xp
+
+
+@pytest.mark.parametrize("n,h,w,c,d,kh,kw,stride,pad", CONV_SHAPES)
+def test_direct_conv_matches_float_truth(n, h, w, c, d, kh, kw, stride, pad):
+    """Pallas direct conv + XLA oracle vs the ±1 float conv ground truth
+    — the window gather, stride walk, all-ones spatial border, and
+    C % 32 tail-word masking must all reproduce the im2col semantics."""
+    x, wt, _, _, wp, xp = _rand_conv_case(n, h, w, c, d, kh, kw)
+    k_bits = kh * kw * c
+    truth = ref.conv2d_pm1_ref(wt, x, stride=stride, pad=pad)
+    got_oracle = bitops.direct_conv_dot(
+        wp, xp, k_bits, kh=kh, kw=kw, stride=stride, pad=pad
+    )
+    np.testing.assert_array_equal(np.asarray(got_oracle), np.asarray(truth))
+    got_pallas = ops.direct_conv(
+        wp, xp, k_bits, kh=kh, kw=kw, stride=stride, pad=pad, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got_pallas), np.asarray(truth))
+
+
+@pytest.mark.parametrize("n,h,w,c,d,kh,kw,stride,pad", CONV_SHAPES)
+def test_fused_direct_conv_matches_float_truth(n, h, w, c, d, kh, kw, stride,
+                                               pad):
+    x, wt, a, b, wp, xp = _rand_conv_case(n, h, w, c, d, kh, kw)
+    k_bits = kh * kw * c
+    want = ref.fused_direct_conv_ref(wt, x, a, b, stride=stride, pad=pad)
+    got = ops.fused_direct_conv(
+        wp, xp, k_bits, a, b, kh=kh, kw=kw, stride=stride, pad=pad,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,h,w,c,d,kh,kw,stride,pad", CONV_SHAPES)
+def test_fused_direct_conv_matches_xla_oracle(n, h, w, c, d, kh, kw, stride,
+                                              pad):
+    """Pallas direct kernel vs bitops.direct_conv_oracle — bit-exact
+    (same int32 dot, same float op order in the epilogue)."""
+    _, _, a, b, wp, xp = _rand_conv_case(n, h, w, c, d, kh, kw)
+    k_bits = kh * kw * c
+    want = bitops.direct_conv_oracle(
+        wp, xp, k_bits, a, b, kh=kh, kw=kw, stride=stride, pad=pad
+    )
+    got = ops.fused_direct_conv(
+        wp, xp, k_bits, a, b, kh=kh, kw=kw, stride=stride, pad=pad,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---- packed im2col edge cases the direct kernel must also honor ----
+# (satellite: stride > 1, pad > 0 with all-ones border words, and
+#  C % 32 != 0 tail-word masking — asserted for BOTH conv_impls)
+
+@pytest.mark.parametrize("stride,pad,c", [
+    (2, 0, 32),    # stride > 1
+    (1, 1, 32),    # pad > 0: all-ones border words
+    (2, 2, 64),    # both, multi-word C
+    (1, 1, 40),    # C % 32 != 0 tail-word masking
+    (2, 1, 33),    # everything ragged at once
+])
+@pytest.mark.parametrize("conv_impl", ["im2col", "direct"])
+def test_fused_conv_edge_cases_both_impls(stride, pad, c, conv_impl):
+    """fused_bit_conv2d vs the ±1 float conv truth through both conv
+    lowerings: the packed im2col path (patch matrix of words, border =
+    all-ones words, ragged C handled by tap-aligned weights + tail +1
+    activation bits) and the direct packed-window path must compute the
+    identical packed output."""
+    n, h, w, d, kh, kw = 2, 9, 9, 21, 3, 3
+    x, wt, a, b, wp, xp = _rand_conv_case(n, h, w, c, d, kh, kw)
+    packed = {"w_packed": wp, "a": a, "b": b}
+    want = ref.fused_direct_conv_ref(wt, x, a, b, stride=stride, pad=pad)
+    for engine in ["xla", "xnor"]:
+        got = layers.fused_bit_conv2d(
+            packed, xp, kh * kw * c, kh=kh, kw=kw, stride=stride, pad=pad,
+            engine=engine, conv_impl=conv_impl,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"engine={engine} conv_impl={conv_impl}",
+        )
+
+
+def test_direct_conv_rejects_mismatched_filter_words():
+    """Flat-packed filters with ragged C are NOT tap-aligned — the
+    direct path must refuse rather than silently misalign words."""
+    c, kh, kw, d = 40, 3, 3, 8
+    wt = _rand_pm1(jax.random.PRNGKey(0), (d, kh, kw, c))
+    flat = layers.pack_conv_params({"w": wt})  # [d, ceil(kh*kw*c/32)]
+    xp = bitops.pack_channels(_rand_pm1(jax.random.PRNGKey(1), (1, 6, 6, c)))
+    with pytest.raises(ValueError, match="tap-aligned"):
+        bitops.direct_conv_dot(
+            flat["w_packed"], xp, kh * kw * c, kh=kh, kw=kw
+        )
 
 
 # property-based sweeps of these kernels (hypothesis) live in
