@@ -8,13 +8,20 @@ the direct kernel never writes the ``[N*OH*OW, kH*kW*CW]`` packed patch
 matrix to HBM, which the im2col path writes AND reads back per layer.
 Writes BENCH_direct_conv.json at the repo root.
 
-  PYTHONPATH=src python -m benchmarks.direct_conv
+  PYTHONPATH=src python -m benchmarks.direct_conv [--check]
+
+``--check`` turns the measurement into a regression gate: exit nonzero
+if the direct path is slower than im2col on the fused xnor
+(Pallas-interpret) chain — the ``speedup_xnor_interpret: 0.81``
+regression of the old broadcast-formulation kernels must not return.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -52,16 +59,19 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
 
     # Pallas interpret engine at tiny scale (interpreter is python-speed;
     # this validates the direct kernel path end to end, not TPU perf).
+    # repeats=3: --check gates CI on the ratio of these two numbers, so
+    # a single-shot measurement's noise (GC pause, noisy neighbor) must
+    # not be able to flip it.
     small = images[:2]
     t_im2col_xnor, w2 = _time(
         lambda: bnn_apply_fused(fused, small, engine="xnor",
                                 conv_impl="im2col"),
-        repeats=1,
+        repeats=3,
     )
     t_direct_xnor, g2 = _time(
         lambda: bnn_apply_fused(fused, small, engine="xnor",
                                 conv_impl="direct"),
-        repeats=1,
+        repeats=3,
     )
     bit_identical_xnor = bool(jnp.all(g2 == w2))
 
@@ -120,4 +130,22 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--check", action="store_true",
+        help="exit nonzero if direct is slower than im2col on the fused "
+             "xnor (interpret) path",
+    )
+    parser.add_argument("--batch", type=int, default=8)
+    args = parser.parse_args()
+    result = run(batch=args.batch)
+    if args.check:
+        speedup = result["wall_time_s"]["speedup_xnor_interpret"]
+        if speedup < 1.0:
+            print(
+                f"FAIL: direct conv slower than im2col on the fused xnor "
+                f"path (speedup_xnor_interpret={speedup:.2f} < 1.0)",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        print(f"check OK: speedup_xnor_interpret={speedup:.2f} >= 1.0")

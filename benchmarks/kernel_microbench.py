@@ -4,10 +4,19 @@ three binary-GEMM engines (paper §3.2 adapted to TPU, DESIGN.md §2).
 No TPU here, so the numbers that matter are *structural*: bytes moved
 per output element and per-engine FLOP/byte, computed from shapes —
 plus interpret-mode wall times at validation scale for completeness.
+
+``--tile-sweep`` (DESIGN.md §6) additionally measures the
+broadcast-vs-loop accumulator wall clock at the legacy default tiles,
+sweeps the autotuner's candidate block grid, and writes
+``BENCH_autotune.json`` with the per-step VMEM model (the >=5x
+reduction claim of ISSUE 3 is recorded there).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -15,7 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitops
+from repro.kernels import autotune
 from repro.kernels import ops as kops
+
+BENCH_AUTOTUNE_PATH = (
+    pathlib.Path(__file__).resolve().parent.parent / "BENCH_autotune.json"
+)
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -229,5 +243,143 @@ def run(verbose: bool = True) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Tile sweep + VMEM-per-step model (DESIGN.md §6) -> BENCH_autotune.json
+# ---------------------------------------------------------------------------
+
+# Legacy fixed tiling every kernel hard-coded before the autotuner.
+OLD_DEFAULT = {"block_m": 128, "block_n": 128, "block_kw": 16}
+
+
+def vmem_step_report() -> dict:
+    """Per-grid-step VMEM bytes, broadcast vs loop accumulator, at the
+    legacy default tiles — the backend-independent half of the claim."""
+    rows = {}
+    for name, fused in [("xnor_gemm", False), ("fused_xnor_gemm", True)]:
+        old = autotune.gemm_step_vmem(128, 128, 16, fused=fused,
+                                      accum="broadcast")
+        new = autotune.gemm_step_vmem(128, 128, 16, fused=fused,
+                                      accum="loop")
+        rows[name] = {
+            "default_blocks": [128, 128, 16],
+            "broadcast_bytes": old,
+            "loop_bytes": new,
+            "reduction": old / new,
+        }
+    # Direct conv, CIFAR BNN worst cases: conv1 (Hp=Wp=34, CW=4) and
+    # conv5 (Hp=Wp=10, CW=16 -> KW=144, the big filter row).
+    for name, (hp, cw, ow) in [
+        ("fused_direct_conv[conv1]", (34, 4, 32)),
+        ("fused_direct_conv[conv5]", (10, 16, 8)),
+    ]:
+        old = autotune.conv_step_vmem(hp, hp, cw, 128, 3, 3, ow,
+                                      fused=True, accum="broadcast")
+        new = autotune.conv_step_vmem(hp, hp, cw, 128, 3, 3, ow,
+                                      fused=True, accum="loop")
+        rows[name] = {
+            "default_blocks": [128],
+            "broadcast_bytes": old,
+            "loop_bytes": new,
+            "reduction": old / new,
+        }
+    return rows
+
+
+def tile_sweep(
+    shapes=((256, 2048, 256),), repeats: int = 8, verbose: bool = True
+) -> dict:
+    """Broadcast-vs-loop wall clock at the legacy tiles, then the
+    autotuner's candidate sweep. Interpret-mode timings (compiled by
+    XLA on CPU) — relative ordering is the signal, not TPU perf."""
+    out = {}
+    for m, k, n in shapes:
+        kw = -(-k // 32)
+        key = jax.random.PRNGKey(m + k + n)
+        wp = autotune.rand_packed(jax.random.fold_in(key, 0), (m, kw))
+        xp = autotune.rand_packed(jax.random.fold_in(key, 1), (kw, n))
+        a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+        b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+        per = {}
+        for name, fused in [("xnor_gemm", False), ("fused_xnor_gemm", True)]:
+            fn = kops.fused_xnor_gemm if fused else kops.xnor_gemm
+            extra = (a, b) if fused else ()
+            t_broadcast = autotune.time_call(
+                lambda: fn(wp, xp, k, *extra, accum="broadcast",
+                           **OLD_DEFAULT),
+                repeats,
+            )
+            t_loop = autotune.time_call(
+                lambda: fn(wp, xp, k, *extra, accum="loop", **OLD_DEFAULT),
+                repeats,
+            )
+            timings: dict = {}
+            best = autotune.tune(
+                fn, (m, k, n), fused=fused, repeats=repeats, cache=False,
+                kernel=name, timings=timings,
+            )
+            t_best = min(timings.values())
+            per[name] = {
+                "old_default_blocks": [128, 128, 16],
+                "broadcast_s": t_broadcast,
+                "loop_s": t_loop,
+                "loop_vs_broadcast_speedup": t_broadcast / t_loop,
+                "tuned_blocks": [best.block_m, best.block_n, best.block_kw],
+                "tuned_s": t_best,
+                "tuned_vs_broadcast_speedup": t_broadcast / t_best,
+                "candidates": [
+                    {
+                        "blocks": [c.block_m, c.block_n, c.block_kw],
+                        "wall_s": t,
+                    }
+                    for c, t in timings.items()
+                ],
+            }
+            if verbose:
+                print(
+                    f"{name} {m}x{k}x{n}: broadcast {t_broadcast:.3f}s -> "
+                    f"loop {t_loop:.3f}s "
+                    f"({t_broadcast / t_loop:.2f}x) -> tuned "
+                    f"{best.block_m}/{best.block_n}/{best.block_kw} "
+                    f"{t_best:.3f}s ({t_broadcast / t_best:.2f}x)"
+                )
+        out[f"{m}x{k}x{n}"] = per
+    return out
+
+
+def run_tile_sweep(verbose: bool = True, write: bool = True) -> dict:
+    vmem = vmem_step_report()
+    result = {
+        "vmem_per_step": vmem,
+        "vmem_reduction_min": min(r["reduction"] for r in vmem.values()),
+        "tile_sweep": tile_sweep(verbose=verbose),
+        "note": (
+            "CPU interpret-mode wall clocks (relative ordering only, not "
+            "TPU perf). vmem_per_step is the shape-derived model "
+            "(kernels/autotune.py): per-grid-step VMEM bytes with the "
+            "legacy [bm, bkw, bn] broadcast intermediate vs the "
+            "fori-loop accumulator, at the old default tiles."
+        ),
+    }
+    if verbose:
+        for name, row in vmem.items():
+            print(f"vmem/step {name:28s} {row['broadcast_bytes']/1024:8.0f} "
+                  f"KiB -> {row['loop_bytes']/1024:6.0f} KiB "
+                  f"({row['reduction']:.1f}x)")
+    if write:
+        BENCH_AUTOTUNE_PATH.write_text(json.dumps(result, indent=2) + "\n")
+        if verbose:
+            print(f"wrote {BENCH_AUTOTUNE_PATH}")
+    return result
+
+
 if __name__ == "__main__":
-    run()
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--tile-sweep", action="store_true",
+        help="run the block-size sweep and write BENCH_autotune.json",
+    )
+    args = parser.parse_args()
+    if args.tile_sweep:
+        run_tile_sweep()
+    else:
+        run()

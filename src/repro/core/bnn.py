@@ -64,6 +64,9 @@ class BNNConfig:
     conv_impl: str = "im2col"  # "im2col" | "direct" (PACKED convs only)
     use_scale: bool = False
     num_classes: int = 10
+    # "auto" (autotune cache / VMEM heuristic) or a kernels.autotune
+    # BlockConfig; forwarded to every Pallas kernel launch.
+    blocks: object = "auto"
 
     def layer_cfg(self, *, binarize_acts: bool) -> BitLinearConfig:
         return BitLinearConfig(
@@ -72,6 +75,7 @@ class BNNConfig:
             conv_impl=self.conv_impl,
             use_scale=self.use_scale,
             binarize_acts=binarize_acts,
+            blocks=self.blocks,
         )
 
 
@@ -224,6 +228,7 @@ def bnn_apply_fused(
     engine: str = "xnor",
     conv_impl: str = "im2col",
     use_scale: bool = False,
+    blocks: object = "auto",
 ) -> jnp.ndarray:
     """Fused packed inference: layer boundaries carry PACKED int32 words.
 
@@ -238,8 +243,10 @@ def bnn_apply_fused(
     kernel) or "xla" (``bitops.fused_xnor_layer``, SPMD-safe).
     ``conv_impl`` picks the conv lowering for the interior binary convs:
     ``"im2col"`` (patch-matrix GEMM) or ``"direct"`` (packed-window
-    kernel, no patch matrix in HBM — DESIGN.md §5); logits are
-    bit-identical across all engine x conv_impl combinations.
+    kernel, no patch matrix in HBM — DESIGN.md §5); ``blocks`` is
+    ``"auto"`` or a ``kernels.autotune.BlockConfig`` forwarded to every
+    Pallas launch (DESIGN.md §6). Logits are bit-identical across all
+    engine x conv_impl x block-config combinations.
     """
     # First conv keeps its float boundary (real-valued images), exactly
     # as in the unfused packed path; its BN output is then binarized and
@@ -256,7 +263,7 @@ def bnn_apply_fused(
         xp = fused_bit_conv2d(
             packed["conv"][i], xp, 3 * 3 * c_in,
             kh=3, kw=3, stride=1, pad=1, engine=engine,
-            conv_impl=conv_impl,
+            conv_impl=conv_impl, blocks=blocks,
         )
         if i in POOL_AFTER:
             xp = _maxpool2_packed(xp)
@@ -265,11 +272,11 @@ def bnn_apply_fused(
     xp = xp.reshape(n, -1)  # word order matches pack_linear's K order
     for j in range(len(FC_SIZES) - 1):
         xp = fused_bit_linear(packed["fc"][j], xp, FC_SIZES[j][0],
-                              engine=engine)
+                              engine=engine, blocks=blocks)
     # Last FC: float logits boundary — plain packed GEMM + bias, then
     # the un-folded BatchNorm (same float ops as the unfused path).
     y = packed_act_linear(packed["fc"][-1], xp, FC_SIZES[-1][0],
-                          engine=engine)
+                          engine=engine, blocks=blocks)
     return _batchnorm(packed["bn_fc_last"], y, training=False)
 
 

@@ -28,6 +28,7 @@ from repro.core import bitops
 from repro.core.binarize import QuantMode, binarize_activations, binarize_weights
 from repro.core.im2col import col2im, filters_to_matrix, im2col
 from repro.kernels import ops as kops
+from repro.kernels.autotune import AUTO, block_kwargs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +39,9 @@ class BitLinearConfig:
     engine: str = "xla"                 # "xnor" | "unpack" | "xla"
     conv_impl: str = "im2col"           # "im2col" | "direct" (PACKED convs)
     compute_dtype: object = jnp.float32
+    # "auto" (autotune cache / VMEM heuristic) or a kernels.autotune
+    # BlockConfig; forwarded to every Pallas kernel this layer launches.
+    blocks: object = AUTO
 
 
 def init_linear(key, in_features: int, out_features: int, *, bias: bool = True,
@@ -82,7 +86,9 @@ def _packed_matmul(wp, x2d, k_orig, cfg: BitLinearConfig):
         if n_pad:
             xin = jnp.pad(xin, ((0, 0), (0, n_pad)), constant_values=1.0)
         xp = kops.pack_rows(xin.T)                        # [K_pad/32, B]
-        out = kops.xnor_gemm(wp, xp, k_pad)               # [out, B] int32
+        out = kops.xnor_gemm(
+            wp, xp, k_pad, **block_kwargs(cfg.blocks)
+        )                                                 # [out, B] int32
         out = out + jnp.int32(n_pad)
         return out.T.astype(cfg.compute_dtype)
     # unpack engines: binarize FIRST, then zero-pad — padded positions
@@ -189,25 +195,31 @@ def pack_conv_fused(params: dict, bn: dict, *, use_scale: bool = False,
     return packed
 
 
-def _fused_dispatch(wp, xpT, k_orig: int, a, b, engine: str):
+def _fused_dispatch(wp, xpT, k_orig: int, a, b, engine: str,
+                    blocks: object = AUTO):
     """[KW, N] packed acts -> [ceil(M/32), N] packed outputs."""
     if engine == "xnor":
-        return kops.fused_xnor_gemm(wp, xpT, k_orig, a, b)
+        return kops.fused_xnor_gemm(
+            wp, xpT, k_orig, a, b, **block_kwargs(blocks)
+        )
     if engine == "xla":
         return bitops.fused_xnor_layer(wp, xpT, k_orig, a, b)
     raise ValueError(f"fused path has no engine {engine!r}")
 
 
 def fused_bit_linear(packed: dict, xp: jnp.ndarray, k_orig: int,
-                     *, engine: str = "xnor") -> jnp.ndarray:
+                     *, engine: str = "xnor",
+                     blocks: object = AUTO) -> jnp.ndarray:
     """Fused binary FC: packed acts in, packed acts out.
 
     xp: [batch, KW] int32 words (K-pad bits must be +1, the fused-output
     convention). Returns [batch, ceil(out/32)] int32 words of
     ``sign(a*(x·w) + b)`` — BN already applied via the folded affine.
+    ``blocks``: "auto" or a ``kernels.autotune.BlockConfig``.
     """
     out = _fused_dispatch(
-        packed["w_packed"], xp.T, k_orig, packed["a"], packed["b"], engine
+        packed["w_packed"], xp.T, k_orig, packed["a"], packed["b"], engine,
+        blocks,
     )
     return out.T
 
@@ -223,6 +235,7 @@ def fused_bit_conv2d(
     pad: int = 0,
     engine: str = "xnor",
     conv_impl: str = "im2col",
+    blocks: object = AUTO,
 ) -> jnp.ndarray:
     """Fused binary conv: channel-packed maps in, channel-packed maps out.
 
@@ -242,6 +255,7 @@ def fused_bit_conv2d(
             return kops.fused_direct_conv(
                 packed["w_packed"], xp, k_orig, packed["a"], packed["b"],
                 kh=kh, kw=kw, stride=stride, pad=pad,
+                **block_kwargs(blocks, conv=True),
             )
         if engine == "xla":
             return bitops.direct_conv_oracle(
@@ -258,13 +272,15 @@ def fused_bit_conv2d(
     kwords = patches.shape[-1]
     x2d = patches.reshape(n * oh * ow, kwords)
     out = _fused_dispatch(
-        packed["w_packed"], x2d.T, k_orig, packed["a"], packed["b"], engine
+        packed["w_packed"], x2d.T, k_orig, packed["a"], packed["b"], engine,
+        blocks,
     )  # [DW, N*OH*OW]
     return col2im(out.T.reshape(n, oh * ow, -1), oh, ow)
 
 
 def packed_act_linear(packed: dict, xp: jnp.ndarray, k_orig: int,
                       *, engine: str = "xnor",
+                      blocks: object = AUTO,
                       compute_dtype=jnp.float32) -> jnp.ndarray:
     """Float-boundary epilogue-free layer for pre-packed activations:
     the chain's LAST layer, whose output (logits) stays float.
@@ -275,7 +291,7 @@ def packed_act_linear(packed: dict, xp: jnp.ndarray, k_orig: int,
     """
     wp = packed["w_packed"]
     if engine == "xnor":
-        dot = kops.xnor_gemm(wp, xp.T, k_orig)
+        dot = kops.xnor_gemm(wp, xp.T, k_orig, **block_kwargs(blocks))
     elif engine == "xla":
         dot = bitops.xnor_popcount_matmul(wp, xp.T, k_orig)
     else:
@@ -346,7 +362,7 @@ def _direct_bit_conv2d(params, x, cfg, *, kh, kw, stride, pad):
     if cfg.engine == "xnor":
         dot = kops.direct_conv(
             params["w_packed"], xp, k_orig, kh=kh, kw=kw, stride=stride,
-            pad=pad,
+            pad=pad, **block_kwargs(cfg.blocks, conv=True),
         )
     else:
         dot = bitops.direct_conv_dot(

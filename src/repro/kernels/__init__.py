@@ -9,6 +9,10 @@
                         no im2col patch matrix in HBM (DESIGN.md §5).
 ``direct_conv``       — epilogue-free direct conv (int32 ±1 dot out).
 
+All xnor kernels share the broadcast-free popcount accumulator in
+:mod:`repro.kernels.popcount` and resolve ``block_*="auto"`` tile
+sizes via :mod:`repro.kernels.autotune` (DESIGN.md §6).
+
 Import the padded/dispatching wrappers from :mod:`repro.kernels.ops`;
 oracles live in :mod:`repro.kernels.ref` and :mod:`repro.core.bitops`.
 """

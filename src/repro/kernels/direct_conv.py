@@ -19,13 +19,19 @@ Two variants share the window gather:
 * ``direct_conv_dot``   — epilogue-free int32 ±1 dot ``[N,OH,OW,D]``
                           (the chain-boundary / unfused-PACKED variant).
 
+The popcount accumulation is BROADCAST-FREE (DESIGN.md §6): a
+``lax.fori_loop`` over the kH*kW*CW packed filter words accumulates one
+``[bd, OW]`` popcount per word — the old ``[bd, OW, KW]`` broadcast
+intermediate never exists. ``accum="broadcast"`` keeps the legacy
+formulation for A/B benchmarking only.
+
 VMEM budget per grid step (CIFAR BNN worst case, block_d=128):
   x map     1*34*34*16*4  =  72 KiB   (conv5: Hp=Wp=10 -> 6 KiB)
   w tile    128*144*4     =  72 KiB   (KW = 9*16 words max)
   a, b      128*1*4 x2    =   1 KiB
-  xnor      128*32*144*4  = 2304 KiB  (broadcast over [bd, OW, KW])
+  xnor      128*32*4      =  16 KiB   (one 2-D word term; was 2304 KiB)
   out       32*4*4        = 0.5 KiB
-~2.4 MiB of ~16 MiB VMEM. The map block is revisited across the OH and
+~162 KiB of ~16 MiB VMEM (was ~2.4 MiB). The map block is revisited across the OH and
 D grid axes (same block index), so the pipeline fetches it once per
 image. When the packed map itself outgrows VMEM (or kH*kW is large and
 C tiny, so the patch blow-up the kernel avoids is small), fall back to
@@ -43,6 +49,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.bitops import PACK_BITS
 from repro.kernels import pallas_compat
+from repro.kernels.popcount import DEFAULT_WORD_GROUP, accum_popcount_rows
 
 
 def _gather_windows(x_ref, oh_idx, *, kh: int, kw: int, stride: int, ow: int):
@@ -63,20 +70,27 @@ def _gather_windows(x_ref, oh_idx, *, kh: int, kw: int, stride: int, ow: int):
     return jnp.concatenate(taps, axis=-1)
 
 
-def _popcount_dot(w, xmat, k_bits: int):
+def _popcount_dot(w, xmat, k_bits: int, *, word_group: int, accum: str):
     """w [bd, KW] x xmat [OW, KW] -> exact ±1 dot, int32 [bd, OW]."""
-    xnor = ~(w[:, None, :] ^ xmat[None, :, :])  # [bd, OW, KW]
-    pc = lax.population_count(xnor).astype(jnp.int32)
-    return 2 * jnp.sum(pc, axis=-1) - jnp.int32(k_bits)
+    if accum == "broadcast":
+        # Legacy formulation (A/B benchmarking only).
+        xnor = ~(w[:, None, :] ^ xmat[None, :, :])  # [bd, OW, KW]
+        pc = lax.population_count(xnor).astype(jnp.int32)
+        acc = jnp.sum(pc, axis=-1)
+    else:
+        acc = accum_popcount_rows(w, xmat, word_group=word_group)
+    return 2 * acc - jnp.int32(k_bits)
 
 
 def _fused_direct_conv_kernel(
     x_ref, w_ref, a_ref, b_ref, o_ref, *,
     kh: int, kw: int, stride: int, ow: int, k_bits: int,
+    word_group: int, accum: str,
 ):
     xmat = _gather_windows(x_ref, pl.program_id(1), kh=kh, kw=kw,
                            stride=stride, ow=ow)
-    dot = _popcount_dot(w_ref[...], xmat, k_bits)
+    dot = _popcount_dot(w_ref[...], xmat, k_bits, word_group=word_group,
+                        accum=accum)
     # Same float op order as bitops.direct_conv_oracle / fused_xnor_layer
     # so every conv_impl x engine pair is bit-exact vs the others.
     y = a_ref[...] * dot.astype(jnp.float32) + b_ref[...]  # [bd, OW]
@@ -91,10 +105,12 @@ def _fused_direct_conv_kernel(
 def _direct_conv_dot_kernel(
     x_ref, w_ref, o_ref, *,
     kh: int, kw: int, stride: int, ow: int, k_bits: int,
+    word_group: int, accum: str,
 ):
     xmat = _gather_windows(x_ref, pl.program_id(1), kh=kh, kw=kw,
                            stride=stride, ow=ow)
-    dot = _popcount_dot(w_ref[...], xmat, k_bits)
+    dot = _popcount_dot(w_ref[...], xmat, k_bits, word_group=word_group,
+                        accum=accum)
     o_ref[...] = dot.T[None, None]  # [1, 1, OW, bd]
 
 
@@ -107,7 +123,10 @@ def _grid_and_specs(n, hp, wp_sp, cw, oh, ow, d_pad, block_d, kwords):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_bits", "kh", "kw", "stride", "block_d", "interpret"),
+    static_argnames=(
+        "k_bits", "kh", "kw", "stride", "block_d", "word_group", "accum",
+        "interpret",
+    ),
 )
 def fused_direct_conv(
     wp: jnp.ndarray,
@@ -120,6 +139,8 @@ def fused_direct_conv(
     kw: int,
     stride: int = 1,
     block_d: int = 128,
+    word_group: int = DEFAULT_WORD_GROUP,
+    accum: str = "loop",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Packed map [N, Hp, Wp, CW] x tap-aligned filters [D_pad, kH*kW*CW]
@@ -139,9 +160,10 @@ def fused_direct_conv(
     oh = (hp - kh) // stride + 1
     ow = (wp_sp - kw) // stride + 1
 
+    assert accum in ("loop", "broadcast"), accum
     kernel = functools.partial(
         _fused_direct_conv_kernel, kh=kh, kw=kw, stride=stride, ow=ow,
-        k_bits=k_bits,
+        k_bits=k_bits, word_group=word_group, accum=accum,
     )
     grid, x_spec, w_spec = _grid_and_specs(
         n, hp, wp_sp, cw, oh, ow, d_pad, block_d, kwords
@@ -171,7 +193,10 @@ def fused_direct_conv(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_bits", "kh", "kw", "stride", "block_d", "interpret"),
+    static_argnames=(
+        "k_bits", "kh", "kw", "stride", "block_d", "word_group", "accum",
+        "interpret",
+    ),
 )
 def direct_conv_dot(
     wp: jnp.ndarray,
@@ -182,6 +207,8 @@ def direct_conv_dot(
     kw: int,
     stride: int = 1,
     block_d: int = 128,
+    word_group: int = DEFAULT_WORD_GROUP,
+    accum: str = "loop",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Epilogue-free variant: int32 ±1 dot [N, OH, OW, D_pad].
@@ -197,9 +224,10 @@ def direct_conv_dot(
     oh = (hp - kh) // stride + 1
     ow = (wp_sp - kw) // stride + 1
 
+    assert accum in ("loop", "broadcast"), accum
     kernel = functools.partial(
         _direct_conv_dot_kernel, kh=kh, kw=kw, stride=stride, ow=ow,
-        k_bits=k_bits,
+        k_bits=k_bits, word_group=word_group, accum=accum,
     )
     grid, x_spec, w_spec = _grid_and_specs(
         n, hp, wp_sp, cw, oh, ow, d_pad, block_d, kwords

@@ -17,15 +17,22 @@ the ONLY thing written back to HBM — the float activation tensor of the
 unfused path never exists, and the next binary layer consumes the words
 directly (one fewer ``pack_rows`` launch, ~32x less boundary traffic).
 
+The popcount inner loop is BROADCAST-FREE (DESIGN.md §6): a
+``lax.fori_loop`` over packed K-word groups accumulates one ``[bm, bn]``
+popcount per word — the old ``[bm, bkw, bn]`` xnor intermediate never
+exists. ``accum="broadcast"`` keeps the legacy formulation for A/B
+benchmarking only.
+
 VMEM budget per step (defaults bm=bn=128, bkw=16):
   w tile   128*16*4       =    8 KiB
   x tile   16*128*4       =    8 KiB
   a, b     128*1*4  x2    =    1 KiB
-  xnor     128*16*128*4   = 1024 KiB   (the broadcast intermediate)
+  xnor     128*128*4      =   64 KiB   (one 2-D word term; was 1024 KiB)
   acc      128*128*4      =   64 KiB
   y        128*128*4      =   64 KiB   (epilogue, last K step only)
   out      4*128*4        =    2 KiB
-~1.2 MiB of ~16 MiB VMEM — double buffering still fits comfortably.
+~211 KiB of ~16 MiB VMEM (was ~1.2 MiB) — the freed budget is what lets
+``kernels/autotune.py`` pick much larger tiles with double buffering.
 """
 
 from __future__ import annotations
@@ -40,10 +47,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitops import PACK_BITS
 from repro.kernels import pallas_compat
+from repro.kernels.popcount import DEFAULT_WORD_GROUP, accum_popcount_km
 
 
 def _fused_xnor_gemm_kernel(
-    w_ref, x_ref, a_ref, b_ref, o_ref, acc_ref, *, k_bits: int, nk: int
+    w_ref, x_ref, a_ref, b_ref, o_ref, acc_ref, *,
+    k_bits: int, nk: int, word_group: int, accum: str,
 ):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -51,9 +60,13 @@ def _fused_xnor_gemm_kernel(
 
     w = w_ref[...]  # [bm, bkw] int32 (packed)
     x = x_ref[...]  # [bkw, bn] int32 (packed)
-    xnor = ~(w[:, :, None] ^ x[None, :, :])  # [bm, bkw, bn]
-    pc = lax.population_count(xnor).astype(jnp.int32)
-    acc_ref[...] += jnp.sum(pc, axis=1)
+    if accum == "broadcast":
+        # Legacy formulation (A/B benchmarking only).
+        xnor = ~(w[:, :, None] ^ x[None, :, :])  # [bm, bkw, bn]
+        pc = lax.population_count(xnor).astype(jnp.int32)
+        acc_ref[...] += jnp.sum(pc, axis=1)
+    else:
+        acc_ref[...] += accum_popcount_km(w, x, word_group=word_group)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _epilogue():
@@ -70,7 +83,10 @@ def _fused_xnor_gemm_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_bits", "block_m", "block_n", "block_kw", "interpret"),
+    static_argnames=(
+        "k_bits", "block_m", "block_n", "block_kw", "word_group", "accum",
+        "interpret",
+    ),
 )
 def fused_xnor_gemm(
     wp: jnp.ndarray,
@@ -82,6 +98,8 @@ def fused_xnor_gemm(
     block_m: int = 128,
     block_n: int = 128,
     block_kw: int = 16,
+    word_group: int = DEFAULT_WORD_GROUP,
+    accum: str = "loop",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Packed [M, KW] x packed [KW, N] -> PACKED int32 [M/32, N].
@@ -97,9 +115,13 @@ def fused_xnor_gemm(
     assert block_m % PACK_BITS == 0, block_m
     assert m % block_m == 0 and n % block_n == 0 and kw % block_kw == 0
     assert a.shape == (m, 1) and b.shape == (m, 1), (a.shape, b.shape, m)
+    assert accum in ("loop", "broadcast"), accum
     nk = kw // block_kw
 
-    kernel = functools.partial(_fused_xnor_gemm_kernel, k_bits=k_bits, nk=nk)
+    kernel = functools.partial(
+        _fused_xnor_gemm_kernel, k_bits=k_bits, nk=nk,
+        word_group=word_group, accum=accum,
+    )
     return pl.pallas_call(
         kernel,
         grid=(m // block_m, n // block_n, nk),

@@ -4,6 +4,13 @@ These handle: shape padding to tile multiples (K-padding uses the
 ``(w=0, x=~0)`` xnor-neutral trick from ``core.bitops``), dtype checks,
 and backend dispatch — ``interpret=True`` everywhere except a real TPU,
 so the same call sites validate on CPU and run native on TPU.
+
+Block sizes default to ``"auto"`` (DESIGN.md §6): the autotuner's
+per-shape cache entry when one is valid for this jax version + device,
+else heuristic tiles from the VMEM-budget model. Explicit ints are
+honored but clamped to the padded problem shape, so tiny/ragged layers
+(the 10-output CIFAR head) never trip the kernels' divisibility
+asserts. Block choice never changes results — only speed.
 """
 
 from __future__ import annotations
@@ -14,11 +21,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitops import PACK_BITS, PACKED_DTYPE, pad_packed_operands
+from repro.kernels import autotune
 from repro.kernels import direct_conv as direct_kernel
 from repro.kernels import fused_gemm as fused_kernel
 from repro.kernels import pack as pack_kernel
 from repro.kernels import unpack_gemm as unpack_kernel
 from repro.kernels import xnor_gemm as xnor_kernel
+from repro.kernels.autotune import AUTO
 
 
 def _default_interpret() -> bool:
@@ -30,19 +39,26 @@ def xnor_gemm(
     xp: jnp.ndarray,
     k_bits: int,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 16,
+    block_m: int | str = AUTO,
+    block_n: int | str = AUTO,
+    block_kw: int | str = AUTO,
+    word_group: int | str = AUTO,
+    accum: str = "loop",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Padded, dispatching xnor-popcount GEMM. int32 [M, N] output."""
     if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
         raise TypeError(f"packed operands must be {PACKED_DTYPE}")
     interpret = _default_interpret() if interpret is None else interpret
+    block_m, block_n, block_kw, word_group = autotune.resolve_gemm_blocks(
+        "xnor_gemm", wp.shape[0], wp.shape[1], xp.shape[1],
+        block_m, block_n, block_kw, word_group,
+    )
     wp_p, xp_p, m, n = pad_packed_operands(wp, xp, block_m, block_n, block_kw)
     out = xnor_kernel.xnor_gemm(
         wp_p, xp_p, k_bits,
         block_m=block_m, block_n=block_n, block_kw=block_kw,
+        word_group=word_group, accum=accum,
         interpret=interpret,
     )
     return out[:m, :n]
@@ -86,9 +102,11 @@ def fused_xnor_gemm(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 16,
+    block_m: int | str = AUTO,
+    block_n: int | str = AUTO,
+    block_kw: int | str = AUTO,
+    word_group: int | str = AUTO,
+    accum: str = "loop",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Padded, dispatching fused binary layer (DESIGN.md §4).
@@ -106,6 +124,10 @@ def fused_xnor_gemm(
     interpret = _default_interpret() if interpret is None else interpret
     m, kw = wp.shape
     _, n = xp.shape
+    block_m, block_n, block_kw, word_group = autotune.resolve_gemm_blocks(
+        "fused_xnor_gemm", m, kw, n,
+        block_m, block_n, block_kw, word_group, fused=True,
+    )
     wp_p, xp_p, _, _ = pad_packed_operands(wp, xp, block_m, block_n, block_kw)
     pm = wp_p.shape[0] - m
     # padded output rows: a=0 kills the garbage dot, b=+1 pins the bit to 1.
@@ -114,26 +136,34 @@ def fused_xnor_gemm(
     out = fused_kernel.fused_xnor_gemm(
         wp_p, xp_p, k_bits, a_p, b_p,
         block_m=block_m, block_n=block_n, block_kw=block_kw,
+        word_group=word_group, accum=accum,
         interpret=interpret,
     )
     return out[: -(-m // PACK_BITS), :n]
 
 
-def _pad_direct_conv_operands(wp, xp, pad: int, block_d: int):
+def _pad_direct_conv_operands(wp, xp, pad, kh, kw, stride, block_d,
+                              word_group, *, fused, kernel):
     """Spatial all-ones border + D padding for the direct-conv kernels.
 
-    Returns (wp_p, xpad, d, block_d): ``block_d`` is shrunk to the
-    padded-D extent for small layers so test-scale calls don't tile a
-    128-row block for a 10-channel conv.
+    Returns (wp_p, xpad, d, block_d, word_group): ``block_d`` resolves
+    via the autotuner when ``"auto"`` and is always clamped to the
+    padded-D extent, so test-scale calls never tile a 128-row block for
+    a 10-channel conv.
     """
     d = wp.shape[0]
     if pad:
         xp = jnp.pad(xp, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
                      constant_values=-1)
-    block_d = min(block_d, -(-d // PACK_BITS) * PACK_BITS)
+    _, hp, wp_sp, cw = xp.shape
+    ow = (wp_sp - kw) // stride + 1
+    block_d, word_group = autotune.resolve_conv_block_d(
+        kernel, d, hp, wp_sp, cw, kh, kw, ow, block_d, word_group,
+        fused=fused,
+    )
     pd = -d % block_d
     wp_p = jnp.pad(wp, ((0, pd), (0, 0))) if pd else wp
-    return wp_p, xp, d, block_d
+    return wp_p, xp, d, block_d, word_group
 
 
 def fused_direct_conv(
@@ -147,7 +177,9 @@ def fused_direct_conv(
     kw: int,
     stride: int = 1,
     pad: int = 0,
-    block_d: int = 128,
+    block_d: int | str = AUTO,
+    word_group: int | str = AUTO,
+    accum: str = "loop",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Padded, dispatching fused direct conv (DESIGN.md §5).
@@ -163,13 +195,17 @@ def fused_direct_conv(
     if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
         raise TypeError(f"packed operands must be {PACKED_DTYPE}")
     interpret = _default_interpret() if interpret is None else interpret
-    wp_p, xpad, d, block_d = _pad_direct_conv_operands(wp, xp, pad, block_d)
+    wp_p, xpad, d, block_d, word_group = _pad_direct_conv_operands(
+        wp, xp, pad, kh, kw, stride, block_d, word_group,
+        fused=True, kernel="fused_direct_conv",
+    )
     pd = wp_p.shape[0] - d
     a_p = jnp.pad(a.astype(jnp.float32), (0, pd))[:, None]
     b_p = jnp.pad(b.astype(jnp.float32), (0, pd), constant_values=1.0)[:, None]
     out = direct_kernel.fused_direct_conv(
         wp_p, xpad, k_bits, a_p, b_p,
-        kh=kh, kw=kw, stride=stride, block_d=block_d, interpret=interpret,
+        kh=kh, kw=kw, stride=stride, block_d=block_d,
+        word_group=word_group, accum=accum, interpret=interpret,
     )
     return out[..., : -(-d // PACK_BITS)]
 
@@ -183,7 +219,9 @@ def direct_conv(
     kw: int,
     stride: int = 1,
     pad: int = 0,
-    block_d: int = 128,
+    block_d: int | str = AUTO,
+    word_group: int | str = AUTO,
+    accum: str = "loop",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Padded, dispatching direct-conv ±1 dot: int32 ``[N, OH, OW, D]``.
@@ -195,10 +233,14 @@ def direct_conv(
     if wp.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
         raise TypeError(f"packed operands must be {PACKED_DTYPE}")
     interpret = _default_interpret() if interpret is None else interpret
-    wp_p, xpad, d, block_d = _pad_direct_conv_operands(wp, xp, pad, block_d)
+    wp_p, xpad, d, block_d, word_group = _pad_direct_conv_operands(
+        wp, xp, pad, kh, kw, stride, block_d, word_group,
+        fused=False, kernel="direct_conv",
+    )
     out = direct_kernel.direct_conv_dot(
         wp_p, xpad, k_bits,
-        kh=kh, kw=kw, stride=stride, block_d=block_d, interpret=interpret,
+        kh=kh, kw=kw, stride=stride, block_d=block_d,
+        word_group=word_group, accum=accum, interpret=interpret,
     )
     return out[..., :d]
 

@@ -99,6 +99,36 @@ def test_bnn_fused_engines_agree(params, images):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_bnn_block_config_invariance(params, images):
+    """Acceptance invariant (ISSUE 3): logits are bit-identical across
+    every engine x conv_impl x block-config combination — tile choice
+    (including word_group, so the fori-loop trip count and ragged tail
+    both move) is a pure performance knob."""
+    from repro.kernels.autotune import BlockConfig
+
+    fused = pack_bnn_params_fused(params)
+    want = bnn_apply_fused(fused, images, engine="xla")
+    imgs = images[:1]  # interpret-mode engine at tiny scale
+    want_small = bnn_apply_fused(fused, imgs, engine="xla")
+    configs = [
+        "auto",
+        BlockConfig(block_m=64, block_n=128, block_kw=4, word_group=3),
+        BlockConfig(block_m=256, block_n=256, block_kw=32, word_group=16),
+    ]
+    for conv_impl in ["im2col", "direct"]:
+        # xla engine ignores blocks but must stay identical under them
+        got = bnn_apply_fused(fused, images, engine="xla",
+                              conv_impl=conv_impl, blocks=configs[1])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        for blocks in configs:
+            got = bnn_apply_fused(fused, imgs, engine="xnor",
+                                  conv_impl=conv_impl, blocks=blocks)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want_small),
+                err_msg=f"conv_impl={conv_impl} blocks={blocks}",
+            )
+
+
 def test_bnn_fused_boundaries_are_packed(params):
     """The fused pack drops every interior float boundary: interior
     layers carry only (w_packed, a, b) — no float bias / BN dicts."""

@@ -346,5 +346,121 @@ def test_direct_conv_rejects_mismatched_filter_words():
         )
 
 
+# ---------------- accumulator restructure + autotuned blocks ----------------
+# (tentpole: the fori-loop accumulator must match the legacy broadcast
+#  formulation bit-for-bit — including ragged K where k_words is not a
+#  multiple of the word group — and "auto" blocks must match fixed ones.)
+
+RAGGED_K_CASES = [
+    # (m, k, n, word_group): k/32 words deliberately not a multiple of
+    # the group so the static tail path runs.
+    (64, 352, 96, 8),    # 11 words, group 8 -> 1 full group + 3 tail
+    (48, 96, 64, 5),     # 3 words, group 5 -> clamped group, no loop
+    (96, 544, 130, 3),   # 17 words, group 3 -> 5 groups + 2 tail
+]
+
+
+@pytest.mark.parametrize("m,k,n,group", RAGGED_K_CASES)
+def test_xnor_gemm_loop_matches_broadcast_ragged_k(m, k, n, group):
+    key = jax.random.PRNGKey(m + k + n + group)
+    wp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 0), (m, k)), -1)
+    xp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 1), (k, n)), 0)
+    kw = wp.shape[1]
+    assert kw % group != 0, "case must exercise the ragged tail"
+    want = ops.xnor_gemm(wp, xp, k, block_m=128, block_n=128, block_kw=kw,
+                         accum="broadcast", interpret=True)
+    got = ops.xnor_gemm(wp, xp, k, block_m=128, block_n=128, block_kw=kw,
+                        word_group=group, accum="loop", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n,group", RAGGED_K_CASES)
+def test_fused_gemm_loop_matches_broadcast_ragged_k(m, k, n, group):
+    key = jax.random.PRNGKey(m * 3 + k + n + group)
+    wp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 0), (m, k)), -1)
+    xp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 1), (k, n)), 0)
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    kw = wp.shape[1]
+    want = ops.fused_xnor_gemm(wp, xp, k, a, b, block_m=64, block_n=128,
+                               block_kw=kw, accum="broadcast", interpret=True)
+    got = ops.fused_xnor_gemm(wp, xp, k, a, b, block_m=64, block_n=128,
+                              block_kw=kw, word_group=group, accum="loop",
+                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_direct_conv_loop_matches_broadcast_ragged_k():
+    """conv5-like geometry: KW = 9*2 = 18 words, word groups 4 and 7
+    leave ragged tails."""
+    n, h, w, c, d, kh, kw_, stride, pad = 1, 7, 7, 40, 20, 3, 3, 1, 1
+    _, _, a, b, wp, xp = _rand_conv_case(n, h, w, c, d, kh, kw_)
+    k_bits = kh * kw_ * c
+    want = ops.fused_direct_conv(
+        wp, xp, k_bits, a, b, kh=kh, kw=kw_, stride=stride, pad=pad,
+        accum="broadcast", interpret=True,
+    )
+    for group in (4, 7):
+        got = ops.fused_direct_conv(
+            wp, xp, k_bits, a, b, kh=kh, kw=kw_, stride=stride, pad=pad,
+            word_group=group, accum="loop", interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n", [(96, 320, 200), (257, 544, 130)])
+def test_auto_blocks_bit_identical_gemm(m, k, n, tmp_path, monkeypatch):
+    """block_*="auto" (heuristic resolution, isolated empty cache) vs
+    the legacy fixed 128/128/16 tiles — bit-identical, both GEMMs."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    key = jax.random.PRNGKey(m ^ k ^ n)
+    wp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 0), (m, k)), -1)
+    xp = bitops.pack_bits(_rand_pm1(jax.random.fold_in(key, 1), (k, n)), 0)
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    want = ops.xnor_gemm(wp, xp, k, block_m=128, block_n=128, block_kw=16,
+                         interpret=True)
+    got = ops.xnor_gemm(wp, xp, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want = ops.fused_xnor_gemm(wp, xp, k, a, b, block_m=128, block_n=128,
+                               block_kw=16, interpret=True)
+    got = ops.fused_xnor_gemm(wp, xp, k, a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_auto_blocks_bit_identical_direct_conv(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    n, h, w, c, d, kh, kw_ = 2, 9, 9, 40, 70, 3, 3
+    _, _, a, b, wp, xp = _rand_conv_case(n, h, w, c, d, kh, kw_)
+    k_bits = kh * kw_ * c
+    want = ops.fused_direct_conv(wp, xp, k_bits, a, b, kh=kh, kw=kw_,
+                                 stride=1, pad=1, block_d=32, interpret=True)
+    got = ops.fused_direct_conv(wp, xp, k_bits, a, b, kh=kh, kw=kw_,
+                                stride=1, pad=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want = ops.direct_conv(wp, xp, k_bits, kh=kh, kw=kw_, stride=1, pad=1,
+                           block_d=32, interpret=True)
+    got = ops.direct_conv(wp, xp, k_bits, kh=kh, kw=kw_, stride=1, pad=1,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_oversized_explicit_blocks_clamped_not_asserted():
+    """Satellite: a 10-output head with block_m=512 requested must run
+    (clamped to the padded extent), not trip the divisibility assert."""
+    m, k, n = 10, 64, 7
+    key = jax.random.PRNGKey(1)
+    wb = _rand_pm1(jax.random.fold_in(key, 0), (m, k))
+    xb = _rand_pm1(jax.random.fold_in(key, 1), (k, n))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+    wp, xp = bitops.pack_bits(wb, -1), bitops.pack_bits(xb, 0)
+    out = ops.fused_xnor_gemm(wp, xp, k, a, b, block_m=512, block_n=512,
+                              block_kw=64, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.fused_layer_ref(wb, xb, a, b))
+    )
+
+
 # property-based sweeps of these kernels (hypothesis) live in
 # tests/test_properties.py behind pytest.importorskip("hypothesis").
