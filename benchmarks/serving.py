@@ -1,0 +1,336 @@
+"""Serving benchmark: batched vs batch-1 throughput on the fused xnor
+path, bucket/compile accounting, and the structural serving-traffic
+model. Writes BENCH_serving.json at the repo root.
+
+Full mode (default; several minutes — Pallas interpret compiles at
+every bucket):
+
+1. **Serving-config sweep** — ``tune_serving_blocks`` picks the ONE
+   deployment-wide block config that maximizes throughput at the
+   largest measured bucket (persisted in the PR-3 autotune cache).
+2. **Per-bucket throughput** under that deployed config, on
+   ``engine="xnor"`` (the Pallas fused kernels, interpret mode off-TPU
+   — the literal fused xnor path). The headline ratio compares bucket
+   >= 32 against batch-1 under the SAME deployed config: that is
+   exactly the choice a serving fleet faces (one compiled config,
+   dispatch now vs coalesce).
+3. **Structural serving bytes** — per-dispatch HBM traffic splits into
+   batch-invariant weight reads and per-image activation bytes;
+   batching amortizes the former. Shape-derived, backend-independent.
+4. **Engine traffic run** (xla engine, CPU-fast) — seeded ragged
+   requests through the ServingEngine: bucket hit rates, padding
+   overhead, flush reasons, and the steady-state compile invariant
+   (compile count == buckets warmed, zero new compiles under traffic).
+
+``--smoke`` (CI): skips the sweep, uses the xla fallback engine and a
+tiny ladder; still writes the JSON with the same schema.
+
+  PYTHONPATH=src python -m benchmarks.serving [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.kernel_microbench import _ceil_div, fused_chain_traffic
+from repro.core.bnn import (
+    CONV_CHANNELS,
+    FC_SIZES,
+    POOL_AFTER,
+    bnn_serve_fn,
+    init_bnn_params,
+    pack_bnn_params_fused,
+)
+from repro.kernels import autotune
+from repro.serve import ServingEngine, tune_serving_blocks
+from repro.serve.executor import blocks_key
+
+BENCH_PATH = (
+    pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+)
+
+
+# ---------------------------------------------------------------------------
+# Structural serving-traffic model (shape-derived, backend-independent)
+# ---------------------------------------------------------------------------
+
+def serving_traffic_model(buckets=(1, 8, 32, 128)) -> dict:
+    """Per-dispatch HBM bytes of the fused im2col chain at each bucket,
+    split into batch-invariant weight bytes W and per-image activation
+    bytes A: ``bytes(B) = W + B*A``. Serving at bucket B amortizes W
+    over B images; the table reports the per-image amortization ratio
+    ``(W + A) / (W/B + A)`` vs batch-1.
+    """
+    f32 = 4
+    # -- W: every byte read once per dispatch regardless of batch.
+    w_bytes = 0
+    cin0, cout0 = CONV_CHANNELS[0]
+    w_bytes += cout0 * 9 * cin0 * f32 + cout0 * f32      # float first conv
+    w_bytes += 4 * cout0 * f32                            # its separate BN
+    for cin, cout in CONV_CHANNELS[1:]:
+        w_bytes += cout * _ceil_div(9 * cin, 32) * 4      # packed filters
+        w_bytes += 2 * cout * f32                         # folded (a, b)
+    for fin, fout in FC_SIZES[:-1]:
+        w_bytes += fout * _ceil_div(fin, 32) * 4 + 2 * fout * f32
+    fin_l, fout_l = FC_SIZES[-1]
+    w_bytes += fout_l * _ceil_div(fin_l, 32) * 4 + fout_l * f32
+    w_bytes += 4 * fout_l * f32                           # unfolded last BN
+
+    # -- A: bytes that scale with every image in the dispatch.
+    act = 32 * 32 * 3 * f32                               # input read
+    act += 2 * 32 * 32 * cout0 * f32                      # float conv out w+r
+    act += 2 * 32 * 32 * _ceil_div(cout0, 32) * 4         # first packed w+r
+    # interior packed boundaries (write+read), per image:
+    act += fused_chain_traffic(1)["total"]["fused_bytes"]
+    # im2col packed patch matrices (write+read), per image:
+    hw = 32
+    for i, (cin, cout) in enumerate(CONV_CHANNELS):
+        if i > 0:
+            act += 2 * hw * hw * 9 * _ceil_div(cin, 32) * 4
+        if i in POOL_AFTER:
+            hw //= 2
+    act += fout_l * f32                                   # logits write
+
+    per_image_b1 = w_bytes + act
+    rows = {
+        int(b): {
+            "dispatch_bytes": w_bytes + b * act,
+            "per_image_bytes": w_bytes / b + act,
+            "amortization_ratio_vs_batch1": per_image_b1 / (w_bytes / b + act),
+        }
+        for b in buckets
+    }
+    return {
+        "weight_bytes": w_bytes,
+        "act_bytes_per_image": act,
+        "per_bucket": rows,
+        "note": (
+            "bytes(B) = W + B*A for the fused im2col chain; batching "
+            "amortizes the batch-invariant weight reads W. Shape-derived "
+            "— no wall clock involved."
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Measured throughput
+# ---------------------------------------------------------------------------
+
+def measure_bucket_throughput(
+    fused_params: dict,
+    buckets,
+    *,
+    engine: str,
+    blocks: object,
+    key=None,
+) -> dict:
+    """Steady-state img/s per bucket under one (engine, blocks) config.
+
+    One ``bnn_serve_fn`` serves every bucket (as in the executor cache:
+    one jit fn, one executable per shape). Fewer repeats at larger
+    buckets keep full-mode wall time bounded.
+    """
+    key = jax.random.PRNGKey(7) if key is None else key
+    fn = bnn_serve_fn(engine=engine, blocks=blocks)
+    out = {}
+    for b in buckets:
+        # interpret-mode timings on a small shared CPU are noisy;
+        # spend repeats where a single run is cheapest
+        reps = 6 if b == 1 else 3 if b <= 8 else 2 if b <= 32 else 1
+
+        def call(b=b):
+            # fresh operand per call: serve_fn donates on accelerators
+            x = jax.random.normal(jax.random.fold_in(key, b),
+                                  (b, 32, 32, 3))
+            return fn(fused_params, x)
+
+        t = autotune.time_call(call, reps)
+        out[int(b)] = {"wall_s": t, "img_per_s": b / t}
+    return out
+
+
+def traffic_run(fused_params: dict, *, seed: int = 0) -> dict:
+    """Seeded ragged traffic through the ServingEngine (xla engine —
+    CPU-fast; the batching/caching machinery is engine-independent).
+    Returns the stats snapshot plus the steady-state compile check."""
+    eng = ServingEngine(fused_params, engine="xla", buckets=(1, 4, 8),
+                        max_wait_s=0.0)  # max_wait 0: dispatch every poll
+    warmed = eng.warmup()
+    compiles_after_warmup = eng.stats.executor_compiles
+    rng = np.random.default_rng(seed)
+    for _ in range(24):
+        n = int(rng.integers(1, 9))
+        eng.submit(rng.normal(size=(n, 32, 32, 3)).astype(np.float32))
+        eng.step()
+    eng.drain()
+    snap = eng.snapshot()
+    return {
+        "snapshot": snap,
+        "steady_state": {
+            "buckets_warmed": warmed,
+            "compiles_total": snap["executors"]["compiles"],
+            "compiles_under_traffic": (
+                snap["executors"]["compiles"] - compiles_after_warmup
+            ),
+            "compiles_equal_buckets_warmed": (
+                snap["executors"]["compiles"] == warmed
+            ),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = False, verbose: bool = True, write: bool = True) -> dict:
+    params = init_bnn_params(jax.random.PRNGKey(0))
+    fused = pack_bnn_params_fused(params)
+
+    if smoke:
+        engine, buckets, big = "xla", (1, 4, 8), 8
+        blocks, sweep = "auto", None
+        best_single_ratio = None
+    else:
+        engine, buckets, big = "xnor", (1, 8, 32, 128), 32
+        timings: dict = {}
+        blocks = tune_serving_blocks(fused, big, engine=engine,
+                                     repeats=3, timings=timings)
+        # Per-config batch-1 throughput: the batched-vs-batch1 ratio is
+        # only meaningful with the config held FIXED across both sides,
+        # and near-tied configs at the big bucket can differ 2x at
+        # batch-1 — so record the whole (b1, b32, ratio) surface, not
+        # just the winner's row.
+        sweep = {}
+        for c, t in timings.items():
+            r1 = measure_bucket_throughput(fused, (1,), engine=engine,
+                                           blocks=c)
+            sweep[blocks_key(c)] = {
+                "batch1_img_per_s": r1[1]["img_per_s"],
+                "bucket32_img_per_s": big / t,
+                "ratio_32_vs_1": (big / t) / r1[1]["img_per_s"],
+            }
+        best_single_ratio = max(r["ratio_32_vs_1"] for r in sweep.values())
+        if verbose:
+            print(f"serving-config sweep at bucket {big}:")
+            for k, row in sweep.items():
+                print(f"  {k:24s} b1 {row['batch1_img_per_s']:5.2f} "
+                      f"b32 {row['bucket32_img_per_s']:6.2f} img/s "
+                      f"({row['ratio_32_vs_1']:.2f}x)")
+            print(f"  -> deployed config: {blocks_key(blocks)}")
+
+    per_bucket = measure_bucket_throughput(
+        fused, buckets, engine=engine, blocks=blocks
+    )
+    b1 = per_bucket[1]["img_per_s"]
+    ratios = {
+        b: row["img_per_s"] / b1 for b, row in per_bucket.items() if b != 1
+    }
+    # The system-level comparison this subsystem exists for: the serving
+    # engine (bucketed + batched + serving-tuned blocks) vs the repo's
+    # prior dispatch mode — one request at a time with per-shape "auto"
+    # blocks and no batching. Both sides measured, same engine.
+    naive_b1 = (sweep or {}).get("auto", {}).get("batch1_img_per_s", b1)
+    batched_best = max(
+        (row["img_per_s"] for b, row in per_bucket.items() if b >= 32),
+        default=None,
+    )
+    engine_vs_naive = (
+        batched_best / naive_b1 if batched_best is not None else None
+    )
+    structural = serving_traffic_model()
+    traffic = traffic_run(fused)
+
+    result = {
+        "mode": "smoke" if smoke else "full",
+        "engine": engine,
+        "deployed_blocks": blocks_key(blocks),
+        "serving_config_sweep": sweep,
+        "throughput": {
+            "per_bucket": per_bucket,
+            "batched_vs_batch1": ratios,
+            "max_measured_bucket": max(buckets),
+            # Three framings of "batched vs batch-1", most to least
+            # favorable to batch-1 — all measured, none hidden:
+            #   batched_vs_batch1      deployed config held fixed on
+            #                          both sides (the fleet's marginal
+            #                          choice: dispatch now vs coalesce)
+            #   best_single_config...  best ratio any ONE config attains
+            #                          (config fixed per row)
+            #   engine_vs_naive_batch1 the serving engine at bucket>=32
+            #                          vs the repo's PRIOR dispatch mode
+            #                          (batch-1, per-shape auto blocks,
+            #                          no batching) — what the subsystem
+            #                          delivers end to end; note it
+            #                          compounds batching with the
+            #                          config change, so read it next
+            #                          to the same-config rows.
+            "best_single_config_ratio_32_vs_1": best_single_ratio,
+            "engine_vs_naive_batch1": engine_vs_naive,
+            # One verdict per framing (null in smoke mode, where the
+            # xnor path and the >=32 buckets are not measured at all —
+            # a False here would read as a failed criterion in every CI
+            # artifact).
+            "meets_3x_at_32": None if smoke else {
+                "engine_vs_naive_batch1": bool(engine_vs_naive >= 3.0),
+                "best_single_config": bool(best_single_ratio >= 3.0),
+                "deployed_config": bool(
+                    max((r for b, r in ratios.items() if b >= 32),
+                        default=0.0) >= 3.0
+                ),
+            },
+        },
+        "structural_serving_bytes": structural,
+        "engine_traffic": traffic,
+        "note": (
+            "Throughput rows run the fused packed chain via bnn_serve_fn "
+            "under ONE deployed block config (full mode: tuned for the "
+            "largest-bucket steady state on the Pallas interpret xnor "
+            "engine — the fused xnor path as it runs off-TPU; smoke: xla "
+            "fallback). The batched-vs-batch1 ratio is the fleet's actual "
+            "tradeoff: same compiled config, dispatch alone vs coalesce. "
+            "CPU caveat: interpret-mode timings on this 2-core container "
+            "are noisy (+-20%), and the per-image marginal cost bounds "
+            "the measurable amortization at 1 + fixed/marginal (~3x "
+            "here); larger buckets approach it. On accelerator backends "
+            "the same fixed work (launch overhead, weight streaming, "
+            "lane-padded FC tiles) is what the GPU batching wins of Khan "
+            "et al. amortize. structural_serving_bytes is the backend-"
+            "independent weight-amortization model; engine_traffic "
+            "exercises the bucket ladder/cache on the CPU-fast xla "
+            "engine."
+        ),
+    }
+    if verbose:
+        for b, row in per_bucket.items():
+            extra = f"  ({ratios[b]:.2f}x vs batch-1)" if b != 1 else ""
+            print(f"bucket {b:3d}: {row['img_per_s']:6.2f} img/s{extra}")
+        if engine_vs_naive is not None:
+            print(f"engine (bucket>=32, tuned) vs naive batch-1 (auto, "
+                  f"unbatched): {engine_vs_naive:.2f}x")
+        ss = traffic["steady_state"]
+        print(f"steady state: {ss['buckets_warmed']} buckets warmed, "
+              f"{ss['compiles_total']} compiles, "
+              f"{ss['compiles_under_traffic']} under traffic")
+        bt = traffic["snapshot"]["batches"]
+        print(f"traffic: buckets {bt['per_bucket']} | padding "
+              f"{bt['padding_overhead']:.1%}")
+    if write:
+        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
+        if verbose:
+            print(f"wrote {BENCH_PATH}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: xla engine, tiny ladder, no sweep")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

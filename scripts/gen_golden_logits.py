@@ -1,0 +1,65 @@
+"""(Re)generate the golden-logits fixture tests/golden/bnn_logits.json.
+
+The fixture pins the PACKED CIFAR-BNN logits for a fixed seed so kernel
+refactors that silently change numerics fail tier-1 immediately
+(tests/test_golden.py). Floats are stored as float32 hex strings —
+exact round-trip, human-diffable.
+
+Run from the repo root after an INTENTIONAL numerics change:
+
+  PYTHONPATH=src python scripts/gen_golden_logits.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.core.binarize import QuantMode
+from repro.core.bnn import BNNConfig, bnn_apply, init_bnn_params, pack_bnn_params
+
+PARAM_SEED = 7
+IMAGE_SEED = 2024
+BATCH = 4
+OUT = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden" / "bnn_logits.json"
+
+
+def compute_logits() -> np.ndarray:
+    params = init_bnn_params(jax.random.PRNGKey(PARAM_SEED))
+    images = jax.random.normal(
+        jax.random.PRNGKey(IMAGE_SEED), (BATCH, 32, 32, 3)
+    )
+    logits = bnn_apply(
+        pack_bnn_params(params), images,
+        BNNConfig(mode=QuantMode.PACKED, engine="xla"),
+    )
+    return np.asarray(logits, np.float32)
+
+
+def main():
+    logits = compute_logits()
+    fixture = {
+        "description": (
+            "PACKED (engine=xla) logits of the CIFAR BNN for "
+            f"init_bnn_params(PRNGKey({PARAM_SEED})) on "
+            f"normal(PRNGKey({IMAGE_SEED}), ({BATCH}, 32, 32, 3)). "
+            "float32 hex — exact. Regenerate ONLY for intentional "
+            "numeric changes: scripts/gen_golden_logits.py"
+        ),
+        "param_seed": PARAM_SEED,
+        "image_seed": IMAGE_SEED,
+        "shape": list(logits.shape),
+        "generated_with_jax": jax.__version__,
+        "logits_hex": [[float(v).hex() for v in row] for row in logits],
+    }
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(fixture, indent=2) + "\n")
+    print(f"wrote {OUT}")
+    print(logits)
+
+
+if __name__ == "__main__":
+    main()

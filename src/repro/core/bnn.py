@@ -28,6 +28,7 @@ and maxpool becomes a bitwise OR on words (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -278,6 +279,38 @@ def bnn_apply_fused(
     y = packed_act_linear(packed["fc"][-1], xp, FC_SIZES[-1][0],
                           engine=engine, blocks=blocks)
     return _batchnorm(packed["bn_fc_last"], y, training=False)
+
+
+def bnn_serve_fn(
+    *,
+    engine: str = "xla",
+    conv_impl: str = "im2col",
+    blocks: object = "auto",
+):
+    """The serving entry point: a jit-compiled ``(packed, images) ->
+    logits`` callable over :func:`bnn_apply_fused`.
+
+    The kernel-path knobs are bound at closure time (they select traced
+    program structure, not runtime values), so each returned callable
+    compiles once per input shape — exactly the contract the serving
+    executor cache (``repro.serve.executor``) builds on: one executable
+    per ``(bucket, engine, conv_impl, blocks)`` key. The ``images``
+    buffer is donated: a serving batch is consumed by its dispatch, so
+    on accelerators XLA may reuse its pages for intermediates instead
+    of holding both alive. (The CPU backend cannot use donations and
+    warns on every compile, so the annotation is applied only where it
+    can take effect.)
+    """
+    donate = (1,) if jax.default_backend() != "cpu" else ()
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def serve_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
+        return bnn_apply_fused(
+            packed, images, engine=engine, conv_impl=conv_impl,
+            blocks=blocks,
+        )
+
+    return serve_fn
 
 
 def bnn_loss(params, images, labels, cfg: BNNConfig):

@@ -1,0 +1,193 @@
+"""BNN serving driver: run the shape-bucketed batched engine against
+synthetic image traffic and report latency/throughput percentiles.
+
+Two modes:
+
+* ``--smoke`` (default) — a short fixed burst of ragged requests:
+  warms every bucket, verifies per-request logits against a direct
+  ``bnn_apply_fused`` call, prints the stats snapshot. CI runs this.
+* ``--sustained`` — an open-loop load run: requests with random image
+  counts arrive at ``--rate`` req/s for ``--duration`` seconds (real
+  clock); the engine's dispatch loop runs in the gaps. Reports p50/p95/
+  p99 latency, throughput, bucket hit rates and compile counts.
+
+  PYTHONPATH=src python -m repro.launch.serve_bnn --smoke
+  PYTHONPATH=src python -m repro.launch.serve_bnn --sustained \
+      --rate 20 --duration 10 --max-images 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.bnn import (
+    bnn_apply_fused,
+    init_bnn_params,
+    pack_bnn_params_fused,
+)
+from repro.serve import DEFAULT_BUCKETS, ServingEngine, load_serving_blocks
+
+
+def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
+    params = init_bnn_params(jax.random.PRNGKey(args.seed))
+    fused = pack_bnn_params_fused(params)
+    blocks = "auto"
+    if args.blocks == "tuned":
+        # deployment config saved by benchmarks/serving.py (or any
+        # tune_serving_blocks run) in the autotune cache. The tuner may
+        # have run at any bucket of the ladder (the benchmark tunes at
+        # its largest MEASURED bucket), so probe largest-first and say
+        # which entry — if any — was found.
+        for b in sorted(args.buckets, reverse=True):
+            blocks = load_serving_blocks(args.engine, args.conv_impl, b)
+            if blocks != "auto":
+                print(f"using tuned serving config for bucket {b}: "
+                      f"{blocks}")
+                break
+        else:
+            print("no tuned serving config in the autotune cache for "
+                  f"engine={args.engine} conv_impl={args.conv_impl} "
+                  f"buckets={args.buckets}; falling back to 'auto'")
+    return ServingEngine(
+        fused,
+        engine=args.engine,
+        conv_impl=args.conv_impl,
+        blocks=blocks,
+        buckets=args.buckets,
+        max_wait_s=args.max_wait_ms / 1e3,
+        clock=clock,
+    )
+
+
+def _random_request(rng, max_images: int) -> np.ndarray:
+    """One synthetic request: U{1..max_images} random images — the ONE
+    traffic distribution both smoke and sustained modes draw from."""
+    n = int(rng.integers(1, max_images + 1))
+    return rng.normal(size=(n, 32, 32, 3)).astype(np.float32)
+
+
+def _random_requests(rng, count: int, max_images: int) -> list[np.ndarray]:
+    return [_random_request(rng, max_images) for _ in range(count)]
+
+
+def run_smoke(args) -> dict:
+    eng = build_engine(args)
+    t0 = time.monotonic()
+    n_compiled = eng.warmup()
+    t_warm = time.monotonic() - t0
+    print(f"warmup: {n_compiled} bucket executors compiled "
+          f"({', '.join(map(str, eng.batcher.buckets))}) in {t_warm:.1f}s")
+
+    rng = np.random.default_rng(args.seed)
+    requests = _random_requests(rng, args.requests, args.max_images)
+    rids = []
+    for imgs in requests:
+        rids.append(eng.submit(imgs))
+        eng.step()
+    eng.drain()
+
+    # Verify the engine's core contract on the smoke traffic: per-request
+    # logits are bit-identical to running that request's images alone.
+    mismatches = 0
+    for rid, imgs in zip(rids, requests):
+        got = eng.take(rid)
+        want = np.asarray(
+            bnn_apply_fused(eng.executors.packed, imgs,
+                            engine=args.engine, conv_impl=args.conv_impl)
+        )
+        if got is None or not np.array_equal(got, want):
+            mismatches += 1
+    snap = eng.snapshot()
+    print(f"served {snap['requests']['completed']} requests "
+          f"({snap['requests']['images_completed']} images), "
+          f"{mismatches} logits mismatches")
+    print(json.dumps(snap, indent=2))
+    if mismatches:
+        raise SystemExit(f"{mismatches} requests diverged from the "
+                         "exact-shape forward")
+    return snap
+
+
+def run_sustained(args) -> dict:
+    eng = build_engine(args)
+    eng.warmup()
+    rng = np.random.default_rng(args.seed)
+    interval = 1.0 / args.rate
+    t_end = time.monotonic() + args.duration
+    t_next = time.monotonic()
+    submitted = 0
+    while time.monotonic() < t_end:
+        now = time.monotonic()
+        if now >= t_next:
+            eng.submit(_random_request(rng, args.max_images))
+            submitted += 1
+            t_next += interval
+        # pop finished logits as we go: a long load run must not
+        # accumulate every completed result in engine memory
+        for rid in eng.step():
+            eng.take(rid)
+    for rid in eng.drain():
+        eng.take(rid)
+    snap = eng.snapshot()
+    lat, bat = snap["latency_s"], snap["batches"]
+    print(f"sustained: {submitted} requests over {args.duration:.0f}s "
+          f"at {args.rate}/s target")
+    print(f"throughput {snap['throughput']['images_per_s']:.1f} img/s | "
+          f"latency p50 {lat['p50']*1e3:.0f}ms p95 {lat['p95']*1e3:.0f}ms "
+          f"p99 {lat['p99']*1e3:.0f}ms")
+    print(f"buckets {bat['per_bucket']} | padding overhead "
+          f"{bat['padding_overhead']:.1%} | compiles "
+          f"{snap['executors']['compiles']} (steady state: 0 new)")
+    print(json.dumps(snap, indent=2))
+    return snap
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", default="xla", choices=["xla", "xnor"],
+                    help="fused kernel path: pure-XLA fallback (CPU-fast) "
+                         "or Pallas (interpret off-TPU)")
+    ap.add_argument("--conv-impl", default="im2col",
+                    choices=["im2col", "direct"])
+    ap.add_argument("--buckets", type=lambda s: tuple(
+        int(b) for b in s.split(",")), default=None,
+        help="comma-separated batch-size ladder (default: 1,4,8 for "
+             "smoke, 1,8,32,128 for sustained)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="micro-batcher head-of-line latency bound")
+    ap.add_argument("--blocks", default="auto", choices=["auto", "tuned"],
+                    help="'tuned': use the serving config persisted in "
+                         "the autotune cache (benchmarks/serving.py "
+                         "writes it); 'auto': per-shape resolution")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--sustained", action="store_true",
+                      help="open-loop load run")
+    mode.add_argument("--smoke", action="store_true",
+                      help="short burst + logits verification (default)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="smoke: number of requests in the burst")
+    ap.add_argument("--rate", type=float, default=10.0,
+                    help="sustained: request arrivals per second")
+    ap.add_argument("--duration", type=float, default=10.0,
+                    help="sustained: seconds of traffic")
+    ap.add_argument("--max-images", type=int, default=8,
+                    help="images per request ~ U{1..max}")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.buckets is None:
+        # Smoke keeps the ladder small so warmup + the per-request
+        # exact-shape verification forwards stay CI-cheap.
+        args.buckets = DEFAULT_BUCKETS if args.sustained else (1, 4, 8)
+    if args.sustained:
+        run_sustained(args)
+    else:
+        run_smoke(args)
+
+
+if __name__ == "__main__":
+    main()

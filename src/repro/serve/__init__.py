@@ -1,0 +1,49 @@
+"""Batched serving for the packed BNN: request queue + micro-batcher,
+shape-bucket ladder, compiled-executor cache, and serving stats.
+
+    from repro.serve import ServingEngine
+    eng = ServingEngine(pack_bnn_params_fused(params), engine="xla")
+    eng.warmup()
+    rid = eng.submit(images)          # [n, 32, 32, 3]
+    eng.step(); eng.drain()
+    logits = eng.take(rid)            # [n, 10], bit-identical to
+                                      # bnn_apply_fused on images alone
+
+See DESIGN.md §7 for the batching design and docs/api.md for the
+stats/snapshot schema.
+"""
+
+from repro.serve.buckets import (
+    DEFAULT_BUCKETS,
+    bucket_for,
+    normalize_buckets,
+    pad_to_bucket,
+)
+from repro.serve.engine import ServingEngine
+from repro.serve.executor import ExecutorCache, blocks_key
+from repro.serve.queue import Batch, MicroBatcher, Request, Segment
+from repro.serve.stats import ServeStats, percentile
+from repro.serve.tuning import (
+    default_serving_candidates,
+    load_serving_blocks,
+    tune_serving_blocks,
+)
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "bucket_for",
+    "normalize_buckets",
+    "pad_to_bucket",
+    "ServingEngine",
+    "ExecutorCache",
+    "blocks_key",
+    "Batch",
+    "MicroBatcher",
+    "Request",
+    "Segment",
+    "ServeStats",
+    "percentile",
+    "default_serving_candidates",
+    "load_serving_blocks",
+    "tune_serving_blocks",
+]

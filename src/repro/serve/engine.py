@@ -1,0 +1,130 @@
+"""The serving engine: queue + executor cache + stats in one dispatch
+loop (DESIGN.md §7).
+
+Synchronous by construction — ``submit()`` enqueues, ``step()`` applies
+the micro-batcher's flush rules and runs every ready batch, ``drain()``
+finishes the tail. The caller owns the loop (the CLI's load generator,
+the benchmark, the tests); there is no background thread to make timing
+nondeterministic. Results are per-request float logits, bit-identical
+to calling ``bnn_apply_fused`` on the request's images alone — padding
+to a bucket never perturbs real rows (``tests/test_serve.py``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.buckets import DEFAULT_BUCKETS
+from repro.serve.executor import IMAGE_SHAPE, ExecutorCache
+from repro.serve.queue import MicroBatcher
+from repro.serve.stats import ServeStats
+
+
+class ServingEngine:
+    """Batched inference over the fused packed BNN.
+
+    ``packed_params`` comes from ``core.bnn.pack_bnn_params_fused``.
+    ``engine``/``conv_impl``/``blocks`` select the kernel path exactly
+    as in ``bnn_apply_fused``; ``buckets``/``max_wait_s`` shape the
+    batching policy; ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        packed_params: dict,
+        *,
+        engine: str = "xla",
+        conv_impl: str = "im2col",
+        blocks: object = "auto",
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        max_wait_s: float = 0.002,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.stats = ServeStats()
+        self.clock = clock
+        self.batcher = MicroBatcher(buckets, max_wait_s=max_wait_s,
+                                    clock=clock)
+        self.executors = ExecutorCache(
+            packed_params, engine=engine, conv_impl=conv_impl,
+            blocks=blocks, stats=self.stats,
+        )
+        # rid -> [n, 10] float logits being filled segment by segment
+        self._partial: dict[int, np.ndarray] = {}
+        self._filled: dict[int, int] = {}
+        self.results: dict[int, np.ndarray] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+    def warmup(self) -> int:
+        """Compile every bucket in the ladder before taking traffic.
+        Returns the number of executors compiled."""
+        return self.executors.warmup(self.batcher.buckets)
+
+    def submit(self, images: np.ndarray) -> int:
+        """Enqueue one request of ``[n, 32, 32, 3]`` images.
+
+        The per-image shape is checked against the model's fixed input
+        HERE — the queue's own consistency check pins itself to the
+        FIRST request it sees, so without this a wrong-shaped first
+        request would be accepted, blow up mid-dispatch, and poison the
+        queue for every later (valid) request.
+        """
+        images = np.asarray(images)
+        if images.shape[1:] != IMAGE_SHAPE:
+            raise ValueError(
+                f"request rows must be {IMAGE_SHAPE} images, got "
+                f"{images.shape[1:]}"
+            )
+        rid = self.batcher.submit(images)
+        self.stats.on_submit(self.batcher.requests[rid].n)
+        self.stats.mark_wall(self.clock())
+        return rid
+
+    def step(self) -> list[int]:
+        """Run the flush rules once; dispatch any ready batches.
+        Returns the request ids completed by this call."""
+        return self._run(self.batcher.poll())
+
+    def drain(self) -> list[int]:
+        """Flush and run everything still pending."""
+        return self._run(self.batcher.drain())
+
+    def take(self, rid: int) -> Optional[np.ndarray]:
+        """Pop a completed request's logits (None if not finished)."""
+        return self.results.pop(rid, None)
+
+    # -- internals ---------------------------------------------------------
+    def _run(self, batches) -> list[int]:
+        done: list[int] = []
+        for batch in batches:
+            x = batch.assemble(self.batcher.requests)
+            self.stats.on_dispatch(batch.bucket, batch.rows, batch.reason)
+            logits = self.executors.run(x)
+            now = self.clock()
+            self.stats.mark_wall(now)
+            for seg in batch.segments:
+                req = self.batcher.requests[seg.rid]
+                buf = self._partial.get(seg.rid)
+                if buf is None:
+                    buf = np.empty((req.n, logits.shape[-1]), logits.dtype)
+                    self._partial[seg.rid] = buf
+                    self._filled[seg.rid] = 0
+                buf[seg.offset:seg.offset + seg.length] = (
+                    logits[seg.batch_row:seg.batch_row + seg.length]
+                )
+                self._filled[seg.rid] += seg.length
+                if self._filled[seg.rid] == req.n:
+                    self.results[seg.rid] = self._partial.pop(seg.rid)
+                    del self._filled[seg.rid]
+                    self.stats.on_complete(req.n, now - req.t_submit)
+                    self.batcher.forget(seg.rid)
+                    done.append(seg.rid)
+        return done
+
+    def snapshot(self) -> dict:
+        return self.stats.snapshot()
+
+
+__all__ = ["ServingEngine"]

@@ -1,0 +1,108 @@
+"""Compiled-executor cache: one jit'd BNN forward per shape bucket.
+
+XLA specializes executables to input shapes, so each ``(bucket, engine,
+conv_impl, blocks)`` combination compiles exactly once; after warmup,
+steady-state traffic is pure cache hits and the compile count equals
+the number of distinct buckets warmed (asserted in
+``tests/test_serve.py`` and recorded in BENCH_serving.json).
+
+The executors run :func:`repro.core.bnn.bnn_serve_fn` — the jit'd,
+donation-annotated fused packed pipeline — so when ``blocks="auto"``
+each Pallas launch inside the traced program resolves its tiles through
+the PR-3 autotune cache (``kernels/autotune.py``): a ladder warmed once
+on a machine with a populated cache compiles straight to the tuned
+tilings, no re-measurement in the serving path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bnn import bnn_serve_fn
+from repro.serve.stats import ServeStats
+
+IMAGE_SHAPE = (32, 32, 3)  # the CIFAR BNN's fixed per-image shape
+
+
+def blocks_key(blocks) -> str:
+    """Stable cache-key fragment for a ``blocks`` config value."""
+    if isinstance(blocks, str):
+        return blocks
+    # kernels.autotune.BlockConfig (frozen dataclass) or anything with
+    # the same fields — spell the tiling out so distinct configs never
+    # collide.
+    return (f"bm{blocks.block_m}-bn{blocks.block_n}"
+            f"-bkw{blocks.block_kw}-wg{blocks.word_group}")
+
+
+class ExecutorCache:
+    """Lazy per-bucket executor map with hit/miss/compile accounting."""
+
+    def __init__(
+        self,
+        packed_params: dict,
+        *,
+        engine: str = "xla",
+        conv_impl: str = "im2col",
+        blocks: object = "auto",
+        stats: Optional[ServeStats] = None,
+    ):
+        self.packed = packed_params
+        self.engine = engine
+        self.conv_impl = conv_impl
+        self.blocks = blocks
+        self.stats = stats if stats is not None else ServeStats()
+        self._fns: dict[tuple, object] = {}
+
+    def key(self, bucket: int) -> tuple:
+        return (bucket, self.engine, self.conv_impl, blocks_key(self.blocks))
+
+    def get(self, bucket: int):
+        """The compiled callable for ``bucket``; builds (and counts a
+        compile) on first use of that bucket."""
+        k = self.key(bucket)
+        fn = self._fns.get(k)
+        if fn is not None:
+            self.stats.on_executor("|".join(map(str, k)), hit=True,
+                                   compiled=False)
+            return fn
+        # One miss == one jit build == one XLA compile for this shape
+        # (the bucket fixes the only varying dimension).
+        fn = bnn_serve_fn(engine=self.engine, conv_impl=self.conv_impl,
+                          blocks=self.blocks)
+        self._fns[k] = fn
+        self.stats.on_executor("|".join(map(str, k)), hit=False,
+                               compiled=True)
+        return fn
+
+    def run(self, images: np.ndarray) -> np.ndarray:
+        """Execute the bucket-shaped batch (rows == some bucket size).
+
+        Returns host logits ``[bucket, num_classes]``.
+        """
+        fn = self.get(images.shape[0])
+        out = fn(self.packed, jnp.asarray(images))
+        return np.asarray(out)
+
+    def warmup(self, buckets: Sequence[int]) -> int:
+        """Compile every bucket ahead of traffic (zeros input; the
+        executable is shape-specialized, values are irrelevant).
+        Returns the number of executors built by this call."""
+        built = 0
+        for b in buckets:
+            if self.key(b) not in self._fns:
+                built += 1
+            fn = self.get(b)
+            fn(self.packed, jnp.zeros((b,) + IMAGE_SHAPE,
+                                      jnp.float32)).block_until_ready()
+        return built
+
+    @property
+    def size(self) -> int:
+        return len(self._fns)
+
+
+__all__ = ["ExecutorCache", "blocks_key", "IMAGE_SHAPE"]

@@ -1,0 +1,145 @@
+"""Serving statistics: one mutable recorder threaded through the queue,
+executor cache and engine, plus the snapshot schema every surface
+(`launch/serve_bnn.py`, `benchmarks/serving.py`, tests) reads.
+
+Snapshot schema (``ServeStats.snapshot()``)::
+
+    {"requests": {"submitted": int, "completed": int,
+                  "images_submitted": int, "images_completed": int},
+     "batches": {"dispatched": int, "real_rows": int, "padded_rows": int,
+                 "padding_overhead": float,        # padded / (real+padded)
+                 "per_bucket": {bucket: count},    # dispatch counts
+                 "bucket_hit_rate": {bucket: fraction of dispatches},
+                 "flush_reasons": {"full"|"max_wait"|"drain": count}},
+     "executors": {"compiles": int, "hits": int, "misses": int,
+                   "keys": [str, ...]},            # cache keys built
+     "latency_s": {"count": int, "mean": float,
+                   "p50": float, "p95": float, "p99": float, "max": float},
+     "throughput": {"images_per_s": float, "wall_s": float}}
+
+Latency is measured request-submit -> request-complete on the engine's
+(injectable) clock, so the deterministic tests drive it with a fake
+clock and the CLI with ``time.monotonic``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    ordered = sorted(xs)
+    rank = max(0, min(len(ordered) - 1, int(round(q / 100.0 * (len(ordered) - 1)))))
+    return ordered[rank]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Mutable counters; the engine owns one instance per lifetime."""
+
+    submitted_requests: int = 0
+    submitted_images: int = 0
+    completed_requests: int = 0
+    completed_images: int = 0
+    dispatched_batches: int = 0
+    real_rows: int = 0
+    padded_rows: int = 0
+    bucket_dispatches: dict = dataclasses.field(default_factory=dict)
+    flush_reasons: dict = dataclasses.field(default_factory=dict)
+    executor_compiles: int = 0
+    executor_hits: int = 0
+    executor_misses: int = 0
+    executor_keys: list = dataclasses.field(default_factory=list)
+    latencies_s: list = dataclasses.field(default_factory=list)
+    wall_start: Optional[float] = None
+    wall_end: Optional[float] = None
+
+    # -- recording hooks ---------------------------------------------------
+    def on_submit(self, n_images: int) -> None:
+        self.submitted_requests += 1
+        self.submitted_images += n_images
+
+    def on_dispatch(self, bucket: int, real: int, reason: str) -> None:
+        self.dispatched_batches += 1
+        self.real_rows += real
+        self.padded_rows += bucket - real
+        self.bucket_dispatches[bucket] = self.bucket_dispatches.get(bucket, 0) + 1
+        self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
+
+    def on_complete(self, n_images: int, latency_s: float) -> None:
+        self.completed_requests += 1
+        self.completed_images += n_images
+        self.latencies_s.append(latency_s)
+
+    def on_executor(self, key: str, *, hit: bool, compiled: bool) -> None:
+        if hit:
+            self.executor_hits += 1
+        else:
+            self.executor_misses += 1
+            self.executor_keys.append(key)
+        if compiled:
+            self.executor_compiles += 1
+
+    def mark_wall(self, t: float) -> None:
+        if self.wall_start is None:
+            self.wall_start = t
+        self.wall_end = t
+
+    # -- snapshot ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        total_rows = self.real_rows + self.padded_rows
+        wall = (
+            (self.wall_end - self.wall_start)
+            if self.wall_start is not None and self.wall_end is not None
+            else 0.0
+        )
+        lat = self.latencies_s
+        return {
+            "requests": {
+                "submitted": self.submitted_requests,
+                "completed": self.completed_requests,
+                "images_submitted": self.submitted_images,
+                "images_completed": self.completed_images,
+            },
+            "batches": {
+                "dispatched": self.dispatched_batches,
+                "real_rows": self.real_rows,
+                "padded_rows": self.padded_rows,
+                "padding_overhead": (
+                    self.padded_rows / total_rows if total_rows else 0.0
+                ),
+                "per_bucket": dict(sorted(self.bucket_dispatches.items())),
+                "bucket_hit_rate": {
+                    b: c / self.dispatched_batches
+                    for b, c in sorted(self.bucket_dispatches.items())
+                } if self.dispatched_batches else {},
+                "flush_reasons": dict(sorted(self.flush_reasons.items())),
+            },
+            "executors": {
+                "compiles": self.executor_compiles,
+                "hits": self.executor_hits,
+                "misses": self.executor_misses,
+                "keys": list(self.executor_keys),
+            },
+            "latency_s": {
+                "count": len(lat),
+                "mean": sum(lat) / len(lat) if lat else 0.0,
+                "p50": percentile(lat, 50),
+                "p95": percentile(lat, 95),
+                "p99": percentile(lat, 99),
+                "max": max(lat) if lat else 0.0,
+            },
+            "throughput": {
+                "images_per_s": (
+                    self.completed_images / wall if wall > 0 else 0.0
+                ),
+                "wall_s": wall,
+            },
+        }
+
+
+__all__ = ["ServeStats", "percentile"]

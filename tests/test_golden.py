@@ -1,0 +1,89 @@
+"""Golden-logits regression: the PACKED CIFAR-BNN logits for a fixed
+seed are pinned in tests/golden/bnn_logits.json (float32 hex — exact),
+so a kernel refactor that silently changes numerics fails tier-1
+immediately instead of shipping.
+
+The fixture is EXACT by design. Two legitimate reasons it can move:
+
+* an intentional numerics change — regenerate with
+  ``PYTHONPATH=src python scripts/gen_golden_logits.py`` and commit the
+  diff (reviewers see exactly which logits moved);
+* a jax/XLA upgrade that re-associates the float first-conv / final-BN
+  math — the same ulp-level caveat as
+  ``test_bnn_fused_matches_packed_with_trained_stats``. If only a
+  handful of entries drift by <= 1e-4 right after a jax bump, that is
+  toolchain noise, not a kernel bug: regenerate and note the version.
+"""
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.binarize import QuantMode
+from repro.core.bnn import (
+    BNNConfig,
+    bnn_apply,
+    bnn_apply_fused,
+    init_bnn_params,
+    pack_bnn_params,
+    pack_bnn_params_fused,
+)
+
+FIXTURE = pathlib.Path(__file__).parent / "golden" / "bnn_logits.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    data = json.loads(FIXTURE.read_text())
+    logits = np.array(
+        [[float.fromhex(v) for v in row] for row in data["logits_hex"]],
+        np.float32,
+    )
+    assert list(logits.shape) == data["shape"]
+    return data, logits
+
+
+@pytest.fixture(scope="module")
+def seeded():
+    data = json.loads(FIXTURE.read_text())
+    params = init_bnn_params(jax.random.PRNGKey(data["param_seed"]))
+    images = jax.random.normal(
+        jax.random.PRNGKey(data["image_seed"]),
+        tuple(data["shape"][:1]) + (32, 32, 3),
+    )
+    return params, images
+
+
+def test_packed_logits_match_golden(golden, seeded):
+    _, want = golden
+    params, images = seeded
+    got = bnn_apply(
+        pack_bnn_params(params), images,
+        BNNConfig(mode=QuantMode.PACKED, engine="xla"),
+    )
+    np.testing.assert_array_equal(np.asarray(got, np.float32), want)
+
+
+def test_fused_pipeline_matches_golden(golden, seeded):
+    """The fused packed pipeline is pinned to the SAME fixture — the
+    bit-identity chain (fused == unfused PACKED) grounds out in one
+    committed artifact rather than only in relative tests."""
+    _, want = golden
+    params, images = seeded
+    got = bnn_apply_fused(pack_bnn_params_fused(params), images,
+                          engine="xla")
+    np.testing.assert_array_equal(np.asarray(got, np.float32), want)
+
+
+def test_golden_fixture_is_exact_hex(golden):
+    """Guard the fixture format itself: hex floats must round-trip and
+    carry the ±1-dot structure (integer-valued dots scaled by the BN
+    affine make most entries near-integers — a wholesale format break
+    shows up as NaNs/garbage here)."""
+    data, logits = golden
+    assert np.isfinite(logits).all()
+    rt = [[float.fromhex(float(v).hex()) for v in row] for row in logits]
+    np.testing.assert_array_equal(np.asarray(rt, np.float32), logits)

@@ -1,10 +1,13 @@
 """Property-based tests (hypothesis) on the system's core invariants:
 
 * pack/unpack is a bijection on ±1 tensors,
+* pack_channels round-trips ragged C (tail bits pinned to +1),
 * xnor-popcount GEMM == ±1 float GEMM for ANY packed shapes,
 * packed BitLinear == fake-quant BitLinear on ±1-valued weights,
 * EF-compression error is bounded by one quantization step,
-* sharding specs always divide (the divisibility guard is total).
+* sharding specs always divide (the divisibility guard is total),
+* the serving micro-batcher never drops/duplicates/reorders rows
+  under randomized arrival patterns.
 """
 
 import jax
@@ -186,6 +189,77 @@ def test_fused_layer_matches_unfused_property(m, kw, n, seed):
     np.testing.assert_array_equal(
         np.asarray(got), np.asarray(bitops.pack_bits(y, axis=0))
     )
+
+
+@given(
+    c=st.integers(1, 80), lead=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_pack_channels_roundtrip_ragged_c(c, lead, seed):
+    """pack_channels tolerates ANY channel count: the first C unpacked
+    values reproduce the signs exactly and every tail bit of the last
+    word is +1 (the activation-pad half of the xnor-neutral
+    convention)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(lead, c)).astype(np.float32)
+    packed = bitops.pack_channels(jnp.asarray(x))
+    assert packed.shape == (lead, -(-c // 32))
+    back = np.asarray(bitops.unpack_bits(packed, axis=-1))
+    want = np.where(x >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(back[:, :c], want)
+    np.testing.assert_array_equal(
+        back[:, c:], np.ones_like(back[:, c:])
+    )
+
+
+@given(
+    sizes=st.lists(st.integers(1, 11), min_size=1, max_size=12),
+    buckets=st.sets(st.integers(1, 8), min_size=1, max_size=3),
+    events=st.lists(st.sampled_from(["poll", "wait"]), max_size=12),
+    max_wait=st.floats(0.0, 2.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_microbatcher_invariants(sizes, buckets, events, max_wait):
+    """Under ANY arrival pattern and flush timing: no request row is
+    dropped, none is duplicated, rows stay FIFO (within and across
+    requests), every batch respects its bucket, and batches never carry
+    more rows than their bucket."""
+    from repro.serve import MicroBatcher
+
+    class Clock:
+        t = 0.0
+        def __call__(self):
+            return self.t
+
+    clk = Clock()
+    mb = MicroBatcher(sorted(buckets), max_wait_s=max_wait, clock=clk)
+    batches = []
+    it = iter(events + ["poll"] * len(sizes))
+    for n in sizes:
+        mb.submit(np.zeros((n, 1, 1, 1), np.float32))
+        ev = next(it)
+        if ev == "wait":
+            clk.t += max_wait + 0.01
+        batches.extend(mb.poll())
+    batches.extend(mb.drain())
+    assert mb.pending_rows == 0
+
+    ladder = mb.buckets
+    seen = []
+    for b in batches:
+        assert b.bucket in ladder
+        assert 1 <= b.rows <= b.bucket
+        filled = 0
+        for s in b.segments:
+            assert s.batch_row == filled  # contiguous, in order
+            filled += s.length
+            seen.extend((s.rid, s.offset + i) for i in range(s.length))
+        assert filled == b.rows
+    want = [
+        (rid, row) for rid, n in enumerate(sizes) for row in range(n)
+    ]
+    assert seen == want  # exactly once each, global FIFO order
 
 
 class _ShapeMesh:

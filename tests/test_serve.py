@@ -1,0 +1,346 @@
+"""Serving engine: padding neutrality (the bucketing correctness
+claim), deterministic micro-batcher behavior under a fake clock,
+executor-cache accounting, and end-to-end request/result integrity."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bnn import (
+    bnn_apply_fused,
+    bnn_serve_fn,
+    init_bnn_params,
+    pack_bnn_params_fused,
+)
+from repro.serve import (
+    MicroBatcher,
+    ServingEngine,
+    bucket_for,
+    normalize_buckets,
+    pad_to_bucket,
+)
+from repro.serve.executor import ExecutorCache, blocks_key
+
+KEY = jax.random.PRNGKey(99)
+
+
+class FakeClock:
+    """Deterministic clock for queue tests: advances only on demand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def fused_params():
+    return pack_bnn_params_fused(init_bnn_params(KEY))
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.normal(jax.random.fold_in(KEY, 1), (8, 32, 32, 3))
+
+
+# ---------------------------------------------------------------------------
+# Bucket helpers
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_helpers():
+    assert normalize_buckets([32, 1, 8, 8]) == (1, 8, 32)
+    assert bucket_for(1, (1, 8, 32)) == 1
+    assert bucket_for(2, (1, 8, 32)) == 8
+    assert bucket_for(32, (1, 8, 32)) == 32
+    with pytest.raises(ValueError):
+        bucket_for(33, (1, 8, 32))
+    with pytest.raises(ValueError):
+        normalize_buckets([])
+
+
+def test_pad_to_bucket_appends_zero_rows():
+    x = np.ones((3, 2, 2, 1), np.float32)
+    p = pad_to_bucket(x, 8)
+    assert p.shape == (8, 2, 2, 1)
+    np.testing.assert_array_equal(p[:3], x)
+    assert not p[3:].any()
+    assert pad_to_bucket(x, 3) is x  # exact fit: no copy
+    with pytest.raises(ValueError):
+        pad_to_bucket(x, 2)
+
+
+# ---------------------------------------------------------------------------
+# Padding neutrality — the core correctness claim of shape bucketing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["xla", "xnor"])
+@pytest.mark.parametrize("conv_impl", ["im2col", "direct"])
+def test_padding_neutral_logits(fused_params, images, engine, conv_impl):
+    """For EVERY engine x conv_impl pair: a request padded up to a
+    larger bucket yields bit-identical logits on the real rows vs
+    exact-shape execution. (The forward is per-sample independent, so
+    the zero padding rows cannot perturb the real rows.)"""
+    # interpret-mode Pallas is python-speed: keep the xnor pairs tiny
+    n, bucket = (1, 2) if engine == "xnor" else (3, 8)
+    imgs = np.asarray(images[:n])
+    exact = np.asarray(
+        bnn_apply_fused(fused_params, jnp.asarray(imgs), engine=engine,
+                        conv_impl=conv_impl)
+    )
+    padded_out = np.asarray(
+        bnn_apply_fused(
+            fused_params, jnp.asarray(pad_to_bucket(imgs, bucket)),
+            engine=engine, conv_impl=conv_impl,
+        )
+    )
+    np.testing.assert_array_equal(padded_out[:n], exact)
+
+
+def test_padding_rows_do_not_depend_on_real_rows(fused_params, images):
+    """Dual check: the real rows' logits are identical no matter WHAT
+    shares the batch with them (zeros or other live images)."""
+    a = np.asarray(images[:2])
+    batch_zeros = pad_to_bucket(a, 4)
+    batch_other = np.concatenate([a, np.asarray(images[2:4])], axis=0)
+    za = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(batch_zeros)))
+    zb = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(batch_other)))
+    np.testing.assert_array_equal(za[:2], zb[:2])
+
+
+# ---------------------------------------------------------------------------
+# Micro-batcher under a fake clock
+# ---------------------------------------------------------------------------
+
+def _rows(batches):
+    """Flatten emitted batches into (rid, request_row) pairs, in order."""
+    out = []
+    for b in batches:
+        for s in b.segments:
+            out.extend((s.rid, s.offset + i) for i in range(s.length))
+    return out
+
+
+def test_max_wait_flush_with_fake_clock():
+    clk = FakeClock()
+    mb = MicroBatcher((1, 4, 8), max_wait_s=0.5, clock=clk)
+    mb.submit(np.zeros((2, 1, 1, 1)))
+    assert mb.poll() == []                      # young: no flush
+    clk.advance(0.49)
+    assert mb.poll() == []                      # still inside max_wait
+    clk.advance(0.02)
+    (batch,) = mb.poll()
+    assert batch.reason == "max_wait"
+    assert batch.bucket == 4 and batch.rows == 2
+    assert mb.pending_rows == 0
+
+
+def test_full_bucket_flushes_immediately():
+    clk = FakeClock()
+    mb = MicroBatcher((1, 4), max_wait_s=10.0, clock=clk)
+    mb.submit(np.zeros((3, 1, 1, 1)))
+    mb.submit(np.zeros((3, 1, 1, 1)))
+    (batch,) = mb.poll()                        # 6 rows >= max bucket 4
+    assert batch.reason == "full"
+    assert batch.bucket == 4 and batch.rows == 4
+    assert mb.pending_rows == 2                 # split remainder queued
+
+    clk.advance(11.0)
+    (tail,) = mb.poll()
+    assert tail.reason == "max_wait" and tail.rows == 2
+
+
+def test_partial_batch_flush_on_drain():
+    clk = FakeClock()
+    mb = MicroBatcher((1, 4, 8), max_wait_s=10.0, clock=clk)
+    mb.submit(np.zeros((1, 1, 1, 1)))
+    mb.submit(np.zeros((2, 1, 1, 1)))
+    assert mb.poll() == []                      # young + not full
+    (batch,) = mb.drain()
+    assert batch.reason == "drain"
+    assert batch.bucket == 4 and batch.rows == 3
+    assert mb.pending_rows == 0 and mb.drain() == []
+
+
+def test_fifo_order_and_request_splitting():
+    clk = FakeClock()
+    mb = MicroBatcher((2, 4), max_wait_s=0.0, clock=clk)
+    r0 = mb.submit(np.zeros((3, 1, 1, 1)))
+    r1 = mb.submit(np.zeros((3, 1, 1, 1)))
+    batches = mb.poll() + mb.drain()
+    rows = _rows(batches)
+    # every row exactly once, FIFO across and within requests
+    assert rows == [(r0, 0), (r0, 1), (r0, 2), (r1, 0), (r1, 1), (r1, 2)]
+    # r0 was split across the first full batch and the next one
+    assert batches[0].rows == 4 and {s.rid for s in batches[0].segments} == {r0, r1}
+
+
+def test_submit_rejects_mismatched_row_shape():
+    """A bad request must bounce at submit(), not poison the batch its
+    rows would have been coalesced into."""
+    mb = MicroBatcher((4,), max_wait_s=0.0, clock=FakeClock())
+    mb.submit(np.zeros((2, 32, 32, 3), np.float32))
+    with pytest.raises(ValueError, match="row shape"):
+        mb.submit(np.zeros((1, 28, 28, 3), np.float32))
+    with pytest.raises(ValueError):
+        mb.submit(np.zeros((0, 32, 32, 3), np.float32))
+    (batch,) = mb.drain()                       # queue still healthy
+    assert batch.rows == 2
+
+
+def test_batch_assemble_pads_and_orders():
+    clk = FakeClock()
+    mb = MicroBatcher((4,), max_wait_s=0.0, clock=clk)
+    a = np.arange(2 * 4, dtype=np.float32).reshape(2, 2, 2, 1)
+    b = 100 + np.arange(4, dtype=np.float32).reshape(1, 2, 2, 1)
+    mb.submit(a)
+    mb.submit(b)
+    (batch,) = mb.drain()
+    x = batch.assemble(mb.requests)
+    assert x.shape == (4, 2, 2, 1)
+    np.testing.assert_array_equal(x[:2], a)
+    np.testing.assert_array_equal(x[2:3], b)
+    assert not x[3:].any()                      # zero padding rows
+
+
+# ---------------------------------------------------------------------------
+# Executor cache accounting
+# ---------------------------------------------------------------------------
+
+def test_executor_cache_hit_miss_and_compile_counts(fused_params):
+    cache = ExecutorCache(fused_params, engine="xla")
+    warmed = cache.warmup((1, 4))
+    assert warmed == 2
+    assert cache.stats.executor_compiles == 2
+    assert cache.stats.executor_misses == 2
+    # steady state: only hits, no new compiles
+    for _ in range(3):
+        cache.get(1)
+        cache.get(4)
+    assert cache.stats.executor_compiles == 2
+    assert cache.stats.executor_hits >= 6
+    assert cache.size == 2
+    # a novel bucket is a miss + one compile
+    cache.get(8)
+    assert cache.stats.executor_compiles == 3
+    assert cache.stats.executor_keys == [
+        "1|xla|im2col|auto", "4|xla|im2col|auto", "8|xla|im2col|auto"
+    ]
+
+
+def test_blocks_key_distinguishes_configs():
+    from repro.kernels.autotune import BlockConfig
+
+    assert blocks_key("auto") == "auto"
+    k1 = blocks_key(BlockConfig(128, 256, 16, 8))
+    k2 = blocks_key(BlockConfig(128, 256, 32, 8))
+    assert k1 != k2 and "bm128" in k1
+
+
+def test_serving_tuning_cache_roundtrip(fused_params, tmp_path, monkeypatch):
+    """tune_serving_blocks persists its winner in the autotune cache;
+    load_serving_blocks serves it back (and falls back to AUTO for
+    unknown configurations)."""
+    from repro.kernels.autotune import BlockConfig
+    from repro.serve import load_serving_blocks, tune_serving_blocks
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    cfg = BlockConfig(block_m=64, block_n=128, block_kw=4, word_group=4)
+    timings: dict = {}
+    best = tune_serving_blocks(
+        fused_params, 1, engine="xla", candidates=[cfg], repeats=1,
+        timings=timings,
+    )
+    assert best == cfg and timings[cfg] > 0
+    assert load_serving_blocks("xla", "im2col", 1) == cfg
+    # unknown bucket / engine: no entry -> AUTO fallback
+    assert load_serving_blocks("xla", "im2col", 64) == "auto"
+    assert load_serving_blocks("xnor", "im2col", 1) == "auto"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end engine
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_ragged_requests_bit_identical(fused_params, images):
+    clk = FakeClock()
+    eng = ServingEngine(fused_params, engine="xla", buckets=(1, 4, 8),
+                        max_wait_s=0.5, clock=clk)
+    eng.warmup()
+    imgs = np.asarray(images)
+    requests = {eng.submit(imgs[:3]): imgs[:3]}
+    eng.step()
+    requests[eng.submit(imgs[3:4])] = imgs[3:4]
+    clk.advance(1.0)                            # age out -> max_wait flush
+    eng.step()
+    requests[eng.submit(imgs[4:8])] = imgs[4:8]
+    eng.drain()
+
+    for rid, x in requests.items():
+        got = eng.take(rid)
+        want = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(x)))
+        assert got is not None
+        np.testing.assert_array_equal(got, want)
+    snap = eng.snapshot()
+    assert snap["requests"]["completed"] == 3
+    assert snap["requests"]["images_completed"] == 8
+    assert snap["batches"]["real_rows"] == 8
+    # warmup compiled the whole ladder; traffic added no compiles
+    assert snap["executors"]["compiles"] == 3
+
+
+def test_engine_reassembles_request_larger_than_max_bucket(fused_params,
+                                                           images):
+    """A request exceeding the largest bucket is split across batches
+    and its logits reassembled in request-row order."""
+    clk = FakeClock()
+    eng = ServingEngine(fused_params, engine="xla", buckets=(1, 4),
+                        max_wait_s=10.0, clock=clk)
+    eng.warmup()
+    imgs = np.asarray(images[:6])               # 6 > max bucket 4
+    rid = eng.submit(imgs)
+    eng.step()                                  # full 4-row batch
+    assert eng.take(rid) is None                # tail still pending
+    eng.drain()
+    got = eng.take(rid)
+    want = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(imgs)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_rejects_non_image_rows(fused_params):
+    """The engine validates the model's fixed image shape at submit —
+    even for the FIRST request (the queue's generic consistency check
+    alone would pin itself to whatever arrives first)."""
+    eng = ServingEngine(fused_params, engine="xla", buckets=(4,),
+                        max_wait_s=10.0, clock=FakeClock())
+    with pytest.raises(ValueError, match="32, 32, 3"):
+        eng.submit(np.zeros((2, 16, 16, 3), np.float32))
+    rid = eng.submit(np.zeros((1, 32, 32, 3), np.float32))  # still healthy
+    eng.drain()
+    assert eng.take(rid) is not None
+
+
+def test_engine_latency_measured_on_injected_clock(fused_params):
+    clk = FakeClock()
+    eng = ServingEngine(fused_params, engine="xla", buckets=(4,),
+                        max_wait_s=10.0, clock=clk)
+    eng.warmup()
+    eng.submit(np.zeros((2, 32, 32, 3), np.float32))
+    clk.advance(3.0)
+    eng.drain()
+    snap = eng.snapshot()
+    assert snap["latency_s"]["count"] == 1
+    assert snap["latency_s"]["p50"] == pytest.approx(3.0)
+
+
+def test_serve_fn_matches_apply_fused(fused_params, images):
+    fn = bnn_serve_fn(engine="xla")
+    got = np.asarray(fn(fused_params, images[:2]))
+    want = np.asarray(bnn_apply_fused(fused_params, images[:2]))
+    np.testing.assert_array_equal(got, want)
