@@ -19,14 +19,12 @@ regression of the old broadcast-formulation kernels must not return.
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import sys
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.fused_chain import _time
+from benchmarks._util import bench_path, time_fn, write_bench
 from benchmarks.kernel_microbench import direct_conv_chain_traffic
 from repro.core.bnn import (
     bnn_apply_fused,
@@ -34,9 +32,7 @@ from repro.core.bnn import (
     pack_bnn_params_fused,
 )
 
-BENCH_PATH = (
-    pathlib.Path(__file__).resolve().parent.parent / "BENCH_direct_conv.json"
-)
+BENCH_PATH = bench_path("direct_conv")
 
 
 def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
@@ -45,12 +41,12 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
     images = jax.random.normal(jax.random.fold_in(key, 1), (batch, 32, 32, 3))
     fused = pack_bnn_params_fused(params)
 
-    t_im2col, want = _time(
+    t_im2col, want = time_fn(
         jax.jit(lambda p, x: bnn_apply_fused(p, x, engine="xla",
                                              conv_impl="im2col")),
         fused, images,
     )
-    t_direct, got = _time(
+    t_direct, got = time_fn(
         jax.jit(lambda p, x: bnn_apply_fused(p, x, engine="xla",
                                              conv_impl="direct")),
         fused, images,
@@ -63,12 +59,12 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
     # a single-shot measurement's noise (GC pause, noisy neighbor) must
     # not be able to flip it.
     small = images[:2]
-    t_im2col_xnor, w2 = _time(
+    t_im2col_xnor, w2 = time_fn(
         lambda: bnn_apply_fused(fused, small, engine="xnor",
                                 conv_impl="im2col"),
         repeats=3,
     )
-    t_direct_xnor, g2 = _time(
+    t_direct_xnor, g2 = time_fn(
         lambda: bnn_apply_fused(fused, small, engine="xnor",
                                 conv_impl="direct"),
         repeats=3,
@@ -123,9 +119,7 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
               f"(im2col) -> {t['direct_bytes']/1e6:.1f} MB (direct) "
               f"({t['bytes_ratio']:.1f}x fewer)")
     if write:
-        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
-        if verbose:
-            print(f"wrote {BENCH_PATH}")
+        write_bench(BENCH_PATH, result, verbose=verbose)
     return result
 
 

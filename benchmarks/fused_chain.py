@@ -11,14 +11,11 @@ perf trajectory across PRs.
 
 from __future__ import annotations
 
-import json
-import pathlib
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import bench_path, time_fn, write_bench
 from benchmarks.kernel_microbench import fused_chain_traffic
 from repro.core.binarize import QuantMode
 from repro.core.bnn import (
@@ -30,17 +27,7 @@ from repro.core.bnn import (
     pack_bnn_params_fused,
 )
 
-BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused.json"
-
-
-def _time(fn, *args, repeats: int = 3) -> tuple[float, jnp.ndarray]:
-    out = fn(*args)  # compile / warm up
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(repeats):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / repeats, out
+BENCH_PATH = bench_path("fused")
 
 
 def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
@@ -51,10 +38,10 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
     fused = pack_bnn_params_fused(params)
 
     cfg = BNNConfig(mode=QuantMode.PACKED, engine="xla")
-    t_unfused, want = _time(
+    t_unfused, want = time_fn(
         jax.jit(lambda p, x: bnn_apply(p, x, cfg)), packed, images
     )
-    t_fused, got = _time(
+    t_fused, got = time_fn(
         jax.jit(lambda p, x: bnn_apply_fused(p, x, engine="xla")),
         fused, images,
     )
@@ -63,13 +50,13 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
     # Pallas interpret engine at tiny scale (interpreter is python-speed;
     # this validates the fused kernel path end to end, not TPU perf).
     small = images[:2]
-    t_unfused_xnor, w2 = _time(
+    t_unfused_xnor, w2 = time_fn(
         lambda: bnn_apply(
             packed, small, BNNConfig(mode=QuantMode.PACKED, engine="xnor")
         ),
         repeats=1,
     )
-    t_fused_xnor, g2 = _time(
+    t_fused_xnor, g2 = time_fn(
         lambda: bnn_apply_fused(fused, small, engine="xnor"), repeats=1
     )
     bit_identical_xnor = bool(jnp.all(g2 == w2))
@@ -117,9 +104,7 @@ def run(batch: int = 8, verbose: bool = True, write: bool = True) -> dict:
         print(f"inter-layer bytes: {ib['unfused']/1e6:.1f} MB -> "
               f"{ib['fused']/1e6:.1f} MB ({ib['ratio']:.1f}x fewer)")
     if write:
-        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
-        if verbose:
-            print(f"wrote {BENCH_PATH}")
+        write_bench(BENCH_PATH, result, verbose=verbose)
     return result
 
 

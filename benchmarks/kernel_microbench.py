@@ -15,8 +15,6 @@ reduction claim of ISSUE 3 is recorded there).
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import time
 
 import jax
@@ -27,9 +25,9 @@ from repro.core import bitops
 from repro.kernels import autotune
 from repro.kernels import ops as kops
 
-BENCH_AUTOTUNE_PATH = (
-    pathlib.Path(__file__).resolve().parent.parent / "BENCH_autotune.json"
-)
+from benchmarks._util import bench_path, write_bench
+
+BENCH_AUTOTUNE_PATH = bench_path("autotune")
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -175,6 +173,65 @@ def fused_chain_traffic(batch: int = 64) -> dict:
         "bytes_ratio": tot_u / tot_f,
     }
     return out
+
+
+def megakernel_stage_traffic(batch: int = 64) -> dict:
+    """Inter-layer HBM bytes + launches/forward: per-layer fused chain
+    vs the stage megakernel (DESIGN.md §8). Shape-derived.
+
+    The fused chain writes+reads one packed activation tensor per
+    interior layer boundary (7 of them: conv1..conv5, fc0, fc1). The
+    megakernel keeps every boundary INSIDE a stage in VMEM; HBM sees
+    only the three pooled stage-output maps (conv stages) — the FC
+    trunk's boundaries (fc0->fc1->fc2) all live in the launch. Pooled
+    maps are 4x smaller than the conv outputs the per-layer chain
+    round-trips, so the win compounds: fewer boundaries AND smaller
+    tensors.
+    """
+    from repro.core.bnn import CONV_CHANNELS, CONV_STAGES, FC_SIZES, POOL_AFTER
+
+    chain = fused_chain_traffic(batch)
+    n_interior = (len(CONV_CHANNELS) - 1) + (len(FC_SIZES) - 1)
+    stages = {}
+    hw = 32
+    mega_bytes = 0
+    for si, stage in enumerate(CONV_STAGES):
+        for i in stage:
+            if i in POOL_AFTER:
+                hw //= 2
+        cout = CONV_CHANNELS[stage[-1]][1]
+        words = batch * hw * hw * _ceil_div(cout, 32)
+        b = 2 * words * 4  # stage-output map: one write + one read
+        in_stage = [f"conv{i}" for i in stage]
+        stages[f"stage{si + 1}"] = {
+            "convs": in_stage,
+            "boundary_bytes": b,
+            "chain_bytes": sum(chain[c]["fused_bytes"] for c in in_stage),
+        }
+        mega_bytes += b
+    fc_chain = sum(
+        chain[f"fc{j}"]["fused_bytes"] for j in range(len(FC_SIZES) - 1)
+    )
+    stages["fc_trunk"] = {
+        "convs": [f"fc{j}" for j in range(len(FC_SIZES) - 1)],
+        "boundary_bytes": 0,  # fc0->fc1->fc2 all inside the launch
+        "chain_bytes": fc_chain,
+    }
+    total_chain = chain["total"]["fused_bytes"]
+    return {
+        "batch": batch,
+        "per_stage": stages,
+        "total": {
+            "fused_chain_bytes": total_chain,
+            "megakernel_bytes": mega_bytes,
+            "bytes_ratio": total_chain / mega_bytes,
+        },
+        "launches_per_forward": {
+            "unfused_packed": 2 * n_interior,      # pack + gemm per layer
+            "fused_chain": n_interior + 1,          # 1/interior + final head
+            "megakernel": len(CONV_STAGES) + 1,     # 1/stage + FC trunk
+        },
+    }
 
 
 def run(verbose: bool = True) -> dict:
@@ -366,9 +423,7 @@ def run_tile_sweep(verbose: bool = True, write: bool = True) -> dict:
                   f"KiB -> {row['loop_bytes']/1024:6.0f} KiB "
                   f"({row['reduction']:.1f}x)")
     if write:
-        BENCH_AUTOTUNE_PATH.write_text(json.dumps(result, indent=2) + "\n")
-        if verbose:
-            print(f"wrote {BENCH_AUTOTUNE_PATH}")
+        write_bench(BENCH_AUTOTUNE_PATH, result, verbose=verbose)
     return result
 
 

@@ -31,8 +31,6 @@ tiny ladder; still writes the JSON with the same schema.
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +49,9 @@ from repro.kernels import autotune
 from repro.serve import ServingEngine, tune_serving_blocks
 from repro.serve.executor import blocks_key
 
-BENCH_PATH = (
-    pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
-)
+from benchmarks._util import bench_path, write_bench
+
+BENCH_PATH = bench_path("serving")
 
 
 # ---------------------------------------------------------------------------
@@ -322,9 +320,7 @@ def run(smoke: bool = False, verbose: bool = True, write: bool = True) -> dict:
         print(f"traffic: buckets {bt['per_bucket']} | padding "
               f"{bt['padding_overhead']:.1%}")
     if write:
-        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
-        if verbose:
-            print(f"wrote {BENCH_PATH}")
+        write_bench(BENCH_PATH, result, verbose=verbose)
     return result
 
 

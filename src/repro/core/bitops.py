@@ -39,6 +39,9 @@ __all__ = [
     "fused_xnor_layer",
     "direct_conv_dot",
     "direct_conv_oracle",
+    "maxpool2_packed",
+    "megakernel_chain_xla",
+    "conv_stage_xla",
 ]
 
 
@@ -274,6 +277,97 @@ def direct_conv_oracle(
                           pad=pad)
     y = a.astype(jnp.float32) * dot.astype(jnp.float32) + b.astype(jnp.float32)
     return pack_channels(y)
+
+
+def maxpool2_packed(xp: jnp.ndarray) -> jnp.ndarray:
+    """2x2/stride-2 maxpool on a channel-packed ±1 map ``[N, H, W, CW]``
+    = bitwise OR of the four window words: max over {-1, +1} is +1 iff
+    any bit is set, and sign is monotone so sign∘max == max∘sign."""
+    return (
+        xp[:, 0::2, 0::2] | xp[:, 0::2, 1::2]
+        | xp[:, 1::2, 0::2] | xp[:, 1::2, 1::2]
+    )
+
+
+def megakernel_chain_xla(
+    w_stack: jnp.ndarray,
+    a_stack: jnp.ndarray,
+    b_stack: jnp.ndarray,
+    k_bits: tuple[int, ...],
+    xp: jnp.ndarray,
+    m_out: int,
+    *,
+    final_wp: jnp.ndarray = None,
+    final_k_bits: int = 0,
+) -> jnp.ndarray:
+    """Pure-XLA megakernel chain: the oracle for (and SPMD-safe fallback
+    of) ``repro.kernels.megakernel.megakernel_chain``.
+
+    Consumes the SAME stacked operands — packed ``w_stack [L, M_max,
+    KW_max]`` (pad rows/words zero), folded affines ``a_stack``/
+    ``b_stack [L, M_max]`` (pad rows ``a=0, b=+1``), packed ``xp
+    [KW_in, N]`` — and runs the layers as a sequence of
+    :func:`fused_xnor_layer` calls, re-padding the inter-layer
+    activations to all-ones exactly as the kernel's ping-pong scratch
+    does, so the stacking/padding conventions themselves are under
+    test. Returns packed ``[ceil(m_out/32), N]``, or — when ``final_wp
+    [Mf, KWf]`` is given — the final epilogue-free int32 ±1 dot
+    ``[Mf, N]`` (:func:`xnor_popcount_matmul` with ``final_k_bits``).
+    """
+    l, m_max, kw_max = w_stack.shape
+    kw_act = max(kw_max, m_max // PACK_BITS)
+    pad = kw_act - xp.shape[0]
+    act = jnp.pad(xp, ((0, pad), (0, 0)), constant_values=-1) if pad else xp
+    for i in range(l):
+        # Slice each stacked layer back to its TRUE K words (static —
+        # k_bits are python ints): the pad region is xnor-neutral by
+        # the stacking convention, so dropping it changes nothing but
+        # the op count — mirroring the kernel's dynamic trip counts.
+        kw_i = min(kw_max, -(-int(k_bits[i]) // PACK_BITS))
+        out = fused_xnor_layer(
+            w_stack[i, :, :kw_i], act[:kw_i], int(k_bits[i]),
+            a_stack[i], b_stack[i],
+        )  # [m_max/32, n]
+        fill = kw_act - out.shape[0]
+        act = (
+            jnp.pad(out, ((0, fill), (0, 0)), constant_values=-1)
+            if fill else out
+        )
+    if final_wp is not None:
+        return xnor_popcount_matmul(
+            final_wp, act[: final_wp.shape[1]], final_k_bits
+        )
+    return act[: -(-m_out // PACK_BITS)]
+
+
+def conv_stage_xla(
+    xp: jnp.ndarray,
+    weights: tuple[jnp.ndarray, ...],
+    a: tuple[jnp.ndarray, ...],
+    b: tuple[jnp.ndarray, ...],
+    k_bits: tuple[int, ...],
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    pad: int = 1,
+    pool: bool = True,
+) -> jnp.ndarray:
+    """Pure-XLA conv stage: the oracle for (and SPMD-safe fallback of)
+    ``repro.kernels.megakernel.megakernel_conv_stage``.
+
+    Chains :func:`direct_conv_oracle` over the stage's convs (per-layer
+    TRUE shapes: tap-aligned ``weights[l] [D_l, kH*kW*CW_l]``, 1-D
+    ``a[l]``/``b[l] [D_l]``) and finishes with the packed-OR maxpool.
+    Channel-word counts chain exactly: each oracle layer emits
+    ``ceil(D_l/32)`` words/pixel with +1 tail bits — the next layer's
+    activation-pad convention.
+    """
+    act = xp
+    for wl, al, bl, k in zip(weights, a, b, k_bits):
+        act = direct_conv_oracle(
+            wl, act, int(k), al, bl, kh=kh, kw=kw, stride=1, pad=pad
+        )
+    return maxpool2_packed(act) if pool else act
 
 
 def pad_packed_operands(wp, xp, block_m, block_n, block_kw):

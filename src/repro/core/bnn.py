@@ -46,16 +46,38 @@ from repro.core.layers import (
     fused_bit_linear,
     init_conv,
     init_linear,
+    megakernel_conv_stage,
+    megakernel_fc_chain,
     pack_conv_fused,
     pack_conv_params,
     pack_linear_fused,
     pack_linear_params,
     packed_act_linear,
+    stack_chain_layers,
 )
 
 CONV_CHANNELS = [(3, 128), (128, 128), (128, 256), (256, 256), (256, 512), (512, 512)]
 POOL_AFTER = {1, 3, 5}  # maxpool after conv index
 FC_SIZES = [(512 * 4 * 4, 1024), (1024, 1024), (1024, 10)]
+
+
+def _conv_stages() -> tuple[tuple[int, ...], ...]:
+    """Interior binary convs grouped into pool-terminated stages —
+    ((1,), (2, 3), (4, 5)) for the CIFAR net: the megakernel's launch
+    granularity (DESIGN.md §8). Derived from POOL_AFTER so it can never
+    drift from the architecture constants."""
+    stages, cur = [], []
+    for i in range(1, len(CONV_CHANNELS)):
+        cur.append(i)
+        if i in POOL_AFTER:
+            stages.append(tuple(cur))
+            cur = []
+    if cur:
+        stages.append(tuple(cur))
+    return tuple(stages)
+
+
+CONV_STAGES = _conv_stages()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,14 +234,11 @@ def bnn_apply(
     return x
 
 
-def _maxpool2_packed(xp: jnp.ndarray) -> jnp.ndarray:
-    """2x2 maxpool on channel-packed ±1 maps = bitwise OR of the window
-    words (max over {-1,+1} is +1 iff any bit is set; valid because
-    sign is monotone, so sign∘max == max∘sign)."""
-    return (
-        xp[:, 0::2, 0::2] | xp[:, 0::2, 1::2]
-        | xp[:, 1::2, 0::2] | xp[:, 1::2, 1::2]
-    )
+# 2x2 maxpool on channel-packed ±1 maps = bitwise OR of the window
+# words (max over {-1,+1} is +1 iff any bit is set; valid because sign
+# is monotone, so sign∘max == max∘sign). Lives in bitops so the
+# megakernel oracle shares the exact same op.
+_maxpool2_packed = bitops.maxpool2_packed
 
 
 def bnn_apply_fused(
@@ -281,6 +300,92 @@ def bnn_apply_fused(
     return _batchnorm(packed["bn_fc_last"], y, training=False)
 
 
+def pack_bnn_params_megakernel(params: dict, *, use_scale: bool = False) -> dict:
+    """Latent float params -> megakernel inference params.
+
+    Same per-layer packing/folding as :func:`pack_bnn_params_fused`,
+    plus the FC trunk's interior layers pre-stacked at PACK TIME into
+    the megakernel chain's padded ``[L, M_max, KW_max]`` operands
+    (``fc_stack``) — the forward then ships the stacked tensor straight
+    to the launch with zero per-forward stacking work, keeping the
+    weights-resident contract honest. Conv stages keep per-layer
+    tap-aligned params (their true shapes differ per conv; the stage
+    kernel consumes them directly).
+    """
+    fused = pack_bnn_params_fused(params, use_scale=use_scale)
+    return {
+        "conv": fused["conv"],
+        "bn_conv0": fused["bn_conv0"],
+        "fc_stack": stack_chain_layers(fused["fc"][:-1]),
+        "fc_final": fused["fc"][-1],
+        "bn_fc_last": fused["bn_fc_last"],
+    }
+
+
+def bnn_apply_megakernel(
+    packed: dict,
+    images: jnp.ndarray,
+    *,
+    engine: str = "xnor",
+    use_scale: bool = False,
+    blocks: object = "auto",
+) -> jnp.ndarray:
+    """Megakernel inference: ONE launch per network stage, packed
+    activations never touching HBM inside a stage (DESIGN.md §8).
+
+    Computes logits bit-identical to :func:`bnn_apply_fused` (hence to
+    the unfused PACKED path) from :func:`pack_bnn_params_megakernel`
+    params, but the launch structure is per-STAGE, not per-layer:
+
+      float first conv (XLA) -> pack          (unchanged boundary)
+      conv stage 1: conv1 + OR-pool           1 launch
+      conv stage 2: conv2 + conv3 + OR-pool   1 launch
+      conv stage 3: conv4 + conv5 + OR-pool   1 launch
+      FC trunk: fc0 + fc1 (fused) + fc2 dot   1 launch
+      bias + unfolded BN on [N, 10] floats    (unchanged boundary)
+
+    4 launches where the per-layer fused chain takes 8, and 4 of its 7
+    interior packed boundaries (conv2, conv4, fc0, fc1 outputs) now
+    live in VMEM — only the three pooled stage-output maps still cross
+    HBM. ``engine="xnor"`` runs the Pallas megakernels (interpret mode
+    off-TPU); ``engine="xla"`` the pure-XLA oracles (SPMD-safe, and the
+    parity reference). ``blocks`` forwards ``block_n``/``word_group``.
+    """
+    lcfg = BitLinearConfig(
+        mode=QuantMode.FAKE_QUANT, binarize_acts=False, use_scale=use_scale
+    )
+    x = bit_conv2d(packed["conv"][0], images, lcfg, stride=1, pad=1)
+    x = _batchnorm(packed["bn_conv0"], x, training=False)
+    xp = bitops.pack_bits(x, axis=-1)  # [N, H, W, C/32]
+
+    for stage in CONV_STAGES:
+        xp = megakernel_conv_stage(
+            [packed["conv"][i] for i in stage],
+            xp,
+            tuple(3 * 3 * CONV_CHANNELS[i][0] for i in stage),
+            pool=stage[-1] in POOL_AFTER,
+            engine=engine, blocks=blocks,
+        )
+
+    n = xp.shape[0]
+    xp = xp.reshape(n, -1)  # word order matches pack_linear's K order
+    y = megakernel_fc_chain(
+        packed["fc_stack"], xp,
+        tuple(fin for fin, _ in FC_SIZES[:-1]),
+        FC_SIZES[-2][1],
+        final=packed["fc_final"], final_k=FC_SIZES[-1][0],
+        engine=engine, blocks=blocks,
+    )
+    return _batchnorm(packed["bn_fc_last"], y, training=False)
+
+
+# Engines bnn_serve_fn (and thus the serving executor cache) accepts.
+# "xla"/"xnor" dispatch the per-layer fused chain on
+# pack_bnn_params_fused params; "megakernel"/"megakernel_xla" dispatch
+# one-launch-per-stage forwards on pack_bnn_params_megakernel params.
+SERVE_ENGINES = ("xla", "xnor", "megakernel", "megakernel_xla")
+
+
 def bnn_serve_fn(
     *,
     engine: str = "xla",
@@ -288,7 +393,14 @@ def bnn_serve_fn(
     blocks: object = "auto",
 ):
     """The serving entry point: a jit-compiled ``(packed, images) ->
-    logits`` callable over :func:`bnn_apply_fused`.
+    logits`` callable over :func:`bnn_apply_fused` — or, for the
+    megakernel engines, :func:`bnn_apply_megakernel`.
+
+    ``engine`` is ``"xla"``/``"xnor"`` (per-layer fused chain; params =
+    ``pack_bnn_params_fused``) or ``"megakernel"``/``"megakernel_xla"``
+    (one launch per stage via the Pallas megakernels / their pure-XLA
+    oracles; params = ``pack_bnn_params_megakernel``; ``conv_impl`` is
+    ignored — conv stages are direct-path by construction).
 
     The kernel-path knobs are bound at closure time (they select traced
     program structure, not runtime values), so each returned callable
@@ -301,7 +413,21 @@ def bnn_serve_fn(
     warns on every compile, so the annotation is applied only where it
     can take effect.)
     """
+    if engine not in SERVE_ENGINES:
+        raise ValueError(f"unknown serving engine {engine!r}; "
+                         f"expected one of {SERVE_ENGINES}")
     donate = (1,) if jax.default_backend() != "cpu" else ()
+
+    if engine in ("megakernel", "megakernel_xla"):
+        inner = "xnor" if engine == "megakernel" else "xla"
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def serve_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
+            return bnn_apply_megakernel(
+                packed, images, engine=inner, blocks=blocks,
+            )
+
+        return serve_fn
 
     @functools.partial(jax.jit, donate_argnums=donate)
     def serve_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:

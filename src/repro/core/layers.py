@@ -278,6 +278,128 @@ def fused_bit_conv2d(
     return col2im(out.T.reshape(n, oh * ow, -1), oh, ow)
 
 
+# ---------------------------------------------------------------------------
+# Megakernel executors — whole stages in one launch (DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+def stack_chain_layers(layers: list[dict]) -> dict:
+    """Stack fused-layer params (``{"w_packed" [m, kw], "a", "b" [m]}``)
+    into the megakernel chain's padded operands:
+
+    ``{"w": [L, M_max, KW_max], "a": [L, M_max], "b": [L, M_max]}``
+
+    with ``M_max = round_up(max m, 32)`` and ``KW_max = max kw``. Pad
+    weight rows/words are zero; pad affine rows are ``a=0, b=+1`` — the
+    epilogue then pins the padded output bits to +1, the activation-pad
+    convention the next stacked layer's zero weight words consume
+    xnor-neutrally (round-trip property-tested in
+    ``tests/test_properties.py``).
+    """
+    m_max = max(
+        -(-p["w_packed"].shape[0] // bitops.PACK_BITS) * bitops.PACK_BITS
+        for p in layers
+    )
+    kw_max = max(p["w_packed"].shape[1] for p in layers)
+    ws, as_, bs = [], [], []
+    for p in layers:
+        m, kw = p["w_packed"].shape
+        ws.append(jnp.pad(p["w_packed"], ((0, m_max - m), (0, kw_max - kw))))
+        as_.append(jnp.pad(p["a"].astype(jnp.float32), (0, m_max - m)))
+        bs.append(jnp.pad(p["b"].astype(jnp.float32), (0, m_max - m),
+                          constant_values=1.0))
+    return {"w": jnp.stack(ws), "a": jnp.stack(as_), "b": jnp.stack(bs)}
+
+
+def megakernel_fc_chain(
+    stack: dict,
+    xp: jnp.ndarray,
+    k_bits: tuple[int, ...],
+    m_out: int,
+    *,
+    final: Optional[dict] = None,
+    final_k: int = 0,
+    engine: str = "xnor",
+    blocks: object = AUTO,
+) -> jnp.ndarray:
+    """Run a whole FC trunk — stacked fused layers plus (optionally)
+    the float-boundary head's GEMM — in one launch.
+
+    ``stack`` comes from :func:`stack_chain_layers`; ``xp`` is
+    ``[batch, KW_in]`` packed activations (K-pad bits +1). Without
+    ``final``: returns ``[batch, ceil(m_out/32)]`` packed words. With
+    ``final`` (a ``pack_linear_params`` dict): returns the head's
+    float ``[batch, out]`` — exact int32 ±1 dot computed IN the launch,
+    bias/alpha applied here in float, identical math (and identical
+    int32 dot) to :func:`packed_act_linear`, so logits stay
+    bit-identical to the per-layer chain.
+    """
+    from repro.kernels.autotune import megakernel_block_kwargs
+
+    fin_wp = final["w_packed"] if final is not None else None
+    if engine == "xnor":
+        out = kops.megakernel_chain(
+            stack["w"], stack["a"], stack["b"], tuple(k_bits), xp.T, m_out,
+            final_wp=fin_wp, final_k_bits=final_k,
+            **megakernel_block_kwargs(blocks),
+        )
+    elif engine == "xla":
+        out = bitops.megakernel_chain_xla(
+            stack["w"], stack["a"], stack["b"], tuple(k_bits), xp.T, m_out,
+            final_wp=fin_wp, final_k_bits=final_k,
+        )
+    else:
+        raise ValueError(f"megakernel has no engine {engine!r}")
+    if final is None:
+        return out.T
+    y = out.T.astype(jnp.float32)
+    if "alpha" in final:
+        y = y * final["alpha"][None, :].astype(y.dtype)
+    if "b" in final:
+        y = y + final["b"].astype(y.dtype)
+    return y
+
+
+def megakernel_conv_stage(
+    layers: list[dict],
+    xp: jnp.ndarray,
+    k_bits: tuple[int, ...],
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    pad: int = 1,
+    pool: bool = True,
+    engine: str = "xnor",
+    blocks: object = AUTO,
+) -> jnp.ndarray:
+    """Run one conv stage — the stage's fused binary convs + packed-OR
+    maxpool — in one launch (``engine="xnor"``) or via the chained
+    pure-XLA direct-conv oracle (``engine="xla"``, SPMD-safe).
+
+    ``layers``: ``pack_conv_fused`` dicts (tap-aligned ``w_packed``,
+    folded ``a``/``b``); ``xp``: ``[N, H, W, CW]`` channel-packed map.
+    Bit-identical to running :func:`fused_bit_conv2d` per layer and
+    ``maxpool2_packed`` — the intermediate maps just never reach HBM.
+    """
+    from repro.kernels.autotune import megakernel_block_kwargs
+
+    weights = tuple(p["w_packed"] for p in layers)
+    a = tuple(p["a"] for p in layers)
+    b = tuple(p["b"] for p in layers)
+    if engine == "xnor":
+        kwargs = megakernel_block_kwargs(blocks)
+        kwargs.pop("block_n", None)  # batch grid is per-image already
+        return kops.megakernel_conv_stage(
+            xp, weights, a, b, tuple(k_bits), kh=kh, kw=kw, pad=pad,
+            pool=pool, **kwargs,
+        )
+    if engine == "xla":
+        return bitops.conv_stage_xla(
+            xp, weights, a, b, tuple(k_bits), kh=kh, kw=kw, pad=pad,
+            pool=pool,
+        )
+    raise ValueError(f"megakernel has no engine {engine!r}")
+
+
 def packed_act_linear(packed: dict, xp: jnp.ndarray, k_orig: int,
                       *, engine: str = "xnor",
                       blocks: object = AUTO,

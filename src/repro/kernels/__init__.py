@@ -8,6 +8,11 @@
 ``fused_direct_conv`` — direct packed-window conv + the same epilogue:
                         no im2col patch matrix in HBM (DESIGN.md §5).
 ``direct_conv``       — epilogue-free direct conv (int32 ±1 dot out).
+``megakernel_chain``  — a whole chain of fused binary layers in ONE
+                        launch: weights VMEM-resident, packed
+                        activations ping-ponged in scratch (§8).
+``megakernel_conv_stage`` — conv(+conv)+packed-OR-maxpool per launch,
+                        one program per image (§8).
 
 All xnor kernels share the broadcast-free popcount accumulator in
 :mod:`repro.kernels.popcount` and resolve ``block_*="auto"`` tile
@@ -21,6 +26,8 @@ from repro.kernels.ops import (  # noqa: F401
     direct_conv,
     fused_direct_conv,
     fused_xnor_gemm,
+    megakernel_chain,
+    megakernel_conv_stage,
     pack_rows,
     unpack_gemm,
     xnor_gemm,

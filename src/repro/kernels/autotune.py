@@ -44,8 +44,9 @@ import dataclasses
 import json
 import os
 import pathlib
+import tempfile
 import time
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -91,14 +92,25 @@ class BlockConfig:
 
 def gemm_step_vmem(
     bm: int, bn: int, bkw: int, *, fused: bool = False,
-    accum: str = "loop",
+    accum: str = "loop", unpack: bool = False,
 ) -> int:
     """Per-grid-step VMEM bytes of (fused_)xnor_gemm at one tiling.
 
     ``accum="broadcast"`` models the legacy 3-D ``[bm, bkw, bn]`` xnor
     intermediate; ``"loop"`` models the fori_loop accumulator whose
     only intermediate is one 2-D ``[bm, bn]`` word term.
+    ``unpack=True`` models ``unpack_gemm`` instead: the packed weight
+    tile unpacks to a ±1 ``[bm, bkw*32]`` tile in VMEM and contracts a
+    real f32 activation tile on the MXU — a different (and much
+    steeper-in-``bkw``) footprint than the xnor kernels.
     """
+    if unpack:
+        w = bm * bkw * _I32                        # packed words
+        wu = bm * bkw * PACK_BITS * _I32           # unpacked ±1 tile
+        x = bkw * PACK_BITS * bn * _I32            # f32 activation tile
+        acc = bm * bn * _I32                       # f32 accumulator
+        out = bm * bn * _I32
+        return w + wu + x + acc + out
     w = bm * bkw * _I32
     x = bkw * bn * _I32
     acc = bm * bn * _I32
@@ -145,7 +157,7 @@ def _round_up(x: int, mult: int) -> int:
 
 
 def heuristic_gemm_blocks(
-    m: int, kw: int, n: int, *, fused: bool = False,
+    m: int, kw: int, n: int, *, fused: bool = False, unpack: bool = False,
     vmem_budget: int = VMEM_BUDGET_BYTES,
 ) -> BlockConfig:
     """Largest aligned tiles fitting ``vmem_budget``, clamped to shape.
@@ -154,13 +166,15 @@ def heuristic_gemm_blocks(
     the old broadcast default's work per step at ~2.6 MiB) and halves
     the largest contributor until the model fits. Floors: bm >= 32
     (whole packed output words when fused), bn >= 128 (one lane tile),
-    bkw >= 1.
+    bkw >= 1. With ``unpack=True`` the model charges the in-VMEM
+    unpacked ±1 weight tile, so ``bkw`` lands much smaller (each packed
+    K-word is 32 real rows of the MXU contraction).
     """
     m_mult = PACK_BITS if fused else 8
     bm = min(512, _round_up(max(m, 1), m_mult))
     bn = min(512, _round_up(max(n, 1), 128))
     bkw = min(64, max(kw, 1))
-    while gemm_step_vmem(bm, bn, bkw, fused=fused) > vmem_budget:
+    while gemm_step_vmem(bm, bn, bkw, fused=fused, unpack=unpack) > vmem_budget:
         if bm >= bn and bm > m_mult:
             bm = max(m_mult, bm // 2)
         elif bn > 128:
@@ -261,9 +275,28 @@ def save_entry(
         **({"wall_s": wall_s} if wall_s is not None else {}),
     }
     path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_suffix(".tmp")
-    tmp.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
-    tmp.replace(path)
+    # Atomic publish: a UNIQUE temp file in the same directory, fsync'd,
+    # then os.replace — concurrent CI/benchmark runs each stage their
+    # own temp (a shared fixed ".tmp" name lets two writers interleave
+    # into one file), and a reader can never observe a torn write: it
+    # sees either the old cache or the new one. A crash mid-write
+    # leaves at most a stray temp file, never a corrupt cache (and a
+    # corrupt cache would be IGNORED by ``_load_raw``, not fatal).
+    fd, tmp_name = tempfile.mkstemp(
+        dir=path.parent, prefix=path.name + ".", suffix=".tmp"
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(json.dumps(data, indent=2, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_name, path)
+    except BaseException:
+        try:
+            os.unlink(tmp_name)
+        except OSError:
+            pass
+        raise
 
 
 def load_entry(
@@ -405,6 +438,132 @@ def tune(
 
 
 # ---------------------------------------------------------------------------
+# Megakernel: weights-resident VMEM model + joint batch-tile search
+# ---------------------------------------------------------------------------
+
+MEGAKERNEL_KERNEL = "bnn_megakernel"
+# The megakernel's weights are fetched ONCE and stay resident (constant
+# block index) — they are not double-buffered, so only the streamed
+# batch tiles pay the 2x. Budget: 16 MiB VMEM minus ~4 MiB compiler
+# headroom for the whole residency (weights + scratch + intermediates).
+MEGAKERNEL_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def megakernel_vmem(
+    l: int, m_max: int, kw_max: int, block_n: int, *, final_m: int = 0
+) -> int:
+    """Whole-launch VMEM bytes of ``megakernel_chain`` at one batch
+    tile: resident stacked weights/affines + the ping-pong scratch pair
+    + the per-layer intermediates (popcount word term, int32 acc, f32
+    epilogue) + the in/out batch tiles."""
+    kw_act = max(kw_max, m_max // PACK_BITS)
+    weights = l * m_max * kw_max * _I32 + 2 * l * m_max * _I32
+    scratch = 2 * kw_act * block_n * _I32          # ping-pong pair
+    interm = 3 * m_max * block_n * _I32            # word term + acc + y
+    x_tile = kw_act * block_n * _I32
+    fin = final_m * kw_act * _I32 if final_m else 0
+    out = max(final_m, m_max // PACK_BITS) * block_n * _I32
+    return weights + scratch + interm + x_tile + fin + out
+
+
+def heuristic_megakernel_block_n(
+    l: int, m_max: int, kw_max: int, n: int, *, final_m: int = 0,
+    vmem_budget: int = MEGAKERNEL_VMEM_BUDGET,
+) -> int:
+    """Largest lane-aligned batch tile whose modeled whole-launch
+    residency fits ``vmem_budget`` (floor: one 128-lane tile — the
+    weights are resident regardless, so shrinking below a lane tile
+    buys nothing)."""
+    bn = min(512, _round_up(max(n, 1), 128))
+    while (
+        megakernel_vmem(l, m_max, kw_max, bn, final_m=final_m) > vmem_budget
+        and bn > 128
+    ):
+        bn = max(128, bn // 2)
+    return bn
+
+
+def megakernel_shape(
+    l: int, m_max: int, kw_max: int, n: int, final_m: int = 0
+) -> dict:
+    """The autotune-cache shape key for one megakernel chain."""
+    return {"l": l, "m": m_max, "kw": kw_max, "n": n, "mf": final_m}
+
+
+def resolve_megakernel_block_n(
+    l: int, m_max: int, kw_max: int, n: int,
+    block_n, word_group, *, final_m: int = 0,
+) -> tuple[int, int]:
+    """``"auto"`` -> tuned ``bnn_megakernel`` cache entry (same
+    jax-version/device staleness guard as every other kernel) ->
+    weights-resident heuristic; then clamp to the padded batch."""
+    if _is_auto(block_n) or _is_auto(word_group):
+        cfg = None
+        if cache_enabled():
+            cfg = load_entry(
+                MEGAKERNEL_KERNEL, megakernel_shape(l, m_max, kw_max, n,
+                                                    final_m)
+            )
+        if cfg is not None:
+            block_n = cfg.block_n if _is_auto(block_n) else block_n
+            word_group = (
+                cfg.word_group if _is_auto(word_group) else word_group
+            )
+        else:
+            if _is_auto(block_n):
+                block_n = heuristic_megakernel_block_n(
+                    l, m_max, kw_max, n, final_m=final_m
+                )
+            if _is_auto(word_group):
+                word_group = DEFAULT_WORD_GROUP
+    block_n = max(1, min(int(block_n), _round_up(max(n, 1), 128)))
+    return block_n, int(word_group)
+
+
+def tune_block_n(
+    kernel: str,
+    shape: dict,
+    fn: Callable[[int], jnp.ndarray],
+    candidates: Sequence[int] = (128, 256, 512),
+    *,
+    repeats: int = 2,
+    cache: bool = True,
+    timings: Optional[dict] = None,
+) -> int:
+    """Joint batch-tile search for grid-tiles-the-batch kernels
+    (megakernel chains): time ``fn(block_n)`` across ``candidates``,
+    persist the winner under ``kernel``/``shape`` in the existing JSON
+    cache (``block_n`` field of the entry; the staleness stamps and
+    atomic write are shared with every other kernel), return it.
+    """
+    best_bn, best_t = None, float("inf")
+    for bn in candidates:
+        t = time_call(lambda bn=bn: fn(bn), repeats)
+        if timings is not None:
+            timings[bn] = t
+        if t < best_t:
+            best_bn, best_t = bn, t
+    assert best_bn is not None, "empty candidate list"
+    if cache and cache_enabled():
+        save_entry(kernel, shape, BlockConfig(block_n=best_bn),
+                   wall_s=best_t)
+    return best_bn
+
+
+def megakernel_block_kwargs(blocks) -> dict:
+    """Config-surface helper for the megakernel wrappers: a ``blocks``
+    value (``"auto"`` or a :class:`BlockConfig`) -> the keyword
+    arguments ``ops.megakernel_chain`` / ``ops.megakernel_conv_stage``
+    understand (``block_n`` tiles the batch; ``word_group`` is shared
+    with every popcount kernel)."""
+    if _is_auto(blocks) or blocks is None:
+        return {}
+    if isinstance(blocks, BlockConfig):
+        return {"block_n": blocks.block_n, "word_group": blocks.word_group}
+    raise TypeError(f"blocks must be 'auto' or BlockConfig, got {blocks!r}")
+
+
+# ---------------------------------------------------------------------------
 # "auto" resolution for the kernels.ops wrappers
 # ---------------------------------------------------------------------------
 
@@ -415,7 +574,7 @@ def _is_auto(v) -> bool:
 def resolve_gemm_blocks(
     kernel: str, m: int, kw: int, n: int,
     block_m, block_n, block_kw, word_group,
-    *, fused: bool = False,
+    *, fused: bool = False, unpack: bool = False,
 ) -> tuple[int, int, int, int]:
     """Turn possibly-``"auto"`` block requests into concrete ints.
 
@@ -424,13 +583,14 @@ def resolve_gemm_blocks(
     requested) block is then clamped to the padded problem shape, so
     tiny or ragged layers never trip the kernels' divisibility asserts
     — a 10-output CIFAR head runs with bm=32, not a 128-row tile.
+    ``unpack=True`` selects the unpack-MXU VMEM model for the heuristic.
     """
     if any(_is_auto(v) for v in (block_m, block_n, block_kw, word_group)):
         cfg = None
         if cache_enabled():
             cfg = load_entry(kernel, {"m": m, "kw": kw, "n": n})
         if cfg is None:
-            cfg = heuristic_gemm_blocks(m, kw, n, fused=fused)
+            cfg = heuristic_gemm_blocks(m, kw, n, fused=fused, unpack=unpack)
         block_m = cfg.block_m if _is_auto(block_m) else block_m
         block_n = cfg.block_n if _is_auto(block_n) else block_n
         block_kw = cfg.block_kw if _is_auto(block_kw) else block_kw
@@ -491,10 +651,15 @@ __all__ = [
     "AUTO",
     "BlockConfig",
     "VMEM_BUDGET_BYTES",
+    "MEGAKERNEL_KERNEL",
+    "MEGAKERNEL_VMEM_BUDGET",
     "gemm_step_vmem",
     "conv_step_vmem",
+    "megakernel_vmem",
     "heuristic_gemm_blocks",
     "heuristic_conv_block_d",
+    "heuristic_megakernel_block_n",
+    "megakernel_shape",
     "cache_enabled",
     "cache_path",
     "save_entry",
@@ -503,7 +668,10 @@ __all__ = [
     "time_call",
     "rand_packed",
     "tune",
+    "tune_block_n",
     "resolve_gemm_blocks",
     "resolve_conv_block_d",
+    "resolve_megakernel_block_n",
     "block_kwargs",
+    "megakernel_block_kwargs",
 ]

@@ -49,7 +49,11 @@ from jax.experimental import pallas as pl
 
 from repro.core.bitops import PACK_BITS
 from repro.kernels import pallas_compat
-from repro.kernels.popcount import DEFAULT_WORD_GROUP, accum_popcount_rows
+from repro.kernels.popcount import (
+    DEFAULT_WORD_GROUP,
+    accum_popcount_rows,
+    sign_repack_m,
+)
 
 
 def _gather_windows(x_ref, oh_idx, *, kh: int, kw: int, stride: int, ow: int):
@@ -94,11 +98,7 @@ def _fused_direct_conv_kernel(
     # Same float op order as bitops.direct_conv_oracle / fused_xnor_layer
     # so every conv_impl x engine pair is bit-exact vs the others.
     y = a_ref[...] * dot.astype(jnp.float32) + b_ref[...]  # [bd, OW]
-    bd = y.shape[0]
-    bits = (y >= 0).astype(jnp.int32)
-    bits = bits.reshape(bd // PACK_BITS, PACK_BITS, ow)
-    shifts = jnp.arange(PACK_BITS, dtype=jnp.int32)
-    words = jnp.sum(bits << shifts[None, :, None], axis=1)  # [bd/32, OW]
+    words = sign_repack_m(y)  # [bd/32, OW]
     o_ref[...] = words.T[None, None]  # [1, 1, OW, bd/32]
 
 

@@ -47,7 +47,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitops import PACK_BITS
 from repro.kernels import pallas_compat
-from repro.kernels.popcount import DEFAULT_WORD_GROUP, accum_popcount_km
+from repro.kernels.popcount import (
+    DEFAULT_WORD_GROUP,
+    accum_popcount_km,
+    sign_repack_m,
+)
 
 
 def _fused_xnor_gemm_kernel(
@@ -74,11 +78,7 @@ def _fused_xnor_gemm_kernel(
         # bitops.fused_xnor_layer so the two are bit-exact vs each other).
         dot = (2 * acc_ref[...] - jnp.int32(k_bits)).astype(jnp.float32)
         y = a_ref[...] * dot + b_ref[...]          # [bm, bn] float32
-        bm, bn = y.shape
-        bits = (y >= 0).astype(jnp.int32)
-        bits = bits.reshape(bm // PACK_BITS, PACK_BITS, bn)
-        shifts = jnp.arange(PACK_BITS, dtype=jnp.int32)
-        o_ref[...] = jnp.sum(bits << shifts[None, :, None], axis=1)
+        o_ref[...] = sign_repack_m(y)
 
 
 @functools.partial(

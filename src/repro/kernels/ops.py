@@ -24,6 +24,7 @@ from repro.core.bitops import PACK_BITS, PACKED_DTYPE, pad_packed_operands
 from repro.kernels import autotune
 from repro.kernels import direct_conv as direct_kernel
 from repro.kernels import fused_gemm as fused_kernel
+from repro.kernels import megakernel as mega_kernel
 from repro.kernels import pack as pack_kernel
 from repro.kernels import unpack_gemm as unpack_kernel
 from repro.kernels import xnor_gemm as xnor_kernel
@@ -68,18 +69,31 @@ def unpack_gemm(
     wp: jnp.ndarray,
     x: jnp.ndarray,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 8,
+    block_m: int | str = AUTO,
+    block_n: int | str = AUTO,
+    block_kw: int | str = AUTO,
     out_dtype=jnp.float32,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Packed-weight x real-input GEMM (MXU variant). [M, N] output."""
+    """Packed-weight x real-input GEMM (MXU variant). [M, N] output.
+
+    Blocks default to ``"auto"`` like every other wrapper (tuned
+    ``"unpack_gemm"`` cache entry, else the unpack-MXU VMEM-model
+    heuristic — the in-VMEM unpacked ±1 tile makes its footprint much
+    steeper in ``block_kw`` than the xnor kernels'), and explicit ints
+    are clamped to the padded problem shape so ragged layers (the
+    10-output CIFAR head) never trip the kernel's divisibility asserts.
+    """
     if wp.dtype != PACKED_DTYPE:
         raise TypeError(f"packed weights must be {PACKED_DTYPE}")
     interpret = _default_interpret() if interpret is None else interpret
     m, kw = wp.shape
     k, n = x.shape
+    block_m, block_n, block_kw, _ = autotune.resolve_gemm_blocks(
+        "unpack_gemm", m, kw, n,
+        block_m, block_n, block_kw, autotune.DEFAULT_WORD_GROUP,
+        unpack=True,
+    )
     pm = -m % block_m
     pn = -n % block_n
     pkw = -kw % block_kw
@@ -269,6 +283,131 @@ def pack_rows(
     return out[:, :n]
 
 
+def megakernel_chain(
+    w_stack: jnp.ndarray,
+    a_stack: jnp.ndarray,
+    b_stack: jnp.ndarray,
+    k_bits: tuple[int, ...],
+    xp: jnp.ndarray,
+    m_out: int,
+    *,
+    final_wp: jnp.ndarray | None = None,
+    final_k_bits: int = 0,
+    block_n: int | str = AUTO,
+    word_group: int | str = AUTO,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Padded, dispatching megakernel chain (DESIGN.md §8): ``L``
+    stacked fused binary layers — plus an optional epilogue-free final
+    GEMM — in ONE launch, weights VMEM-resident, packed activations
+    ping-ponged in VMEM scratch.
+
+    ``w_stack [L, M_max, KW_max]`` / ``a_stack`` / ``b_stack [L,
+    M_max]`` come from ``repro.core.layers.stack_chain_layers`` (pad
+    rows ``a=0, b=+1``; pad weight words zero). ``xp [KW_in, N]`` is
+    the packed input (K pads +1, the PR-1 convention); this wrapper
+    grows it to the scratch height ``KW_act = max(KW_max, M_max/32)``
+    with all-ones words and pads N to the batch tile. ``k_bits`` are
+    the TRUE per-layer contraction lengths. Returns packed
+    ``[ceil(m_out/32), N]`` — or with ``final_wp [Mf, KWf]`` the exact
+    int32 ±1 dot ``[Mf, N]`` of the float-boundary head (``m_out`` is
+    then ignored). ``block_n`` resolves via the ``"bnn_megakernel"``
+    autotune entry / weights-resident VMEM heuristic.
+    """
+    if w_stack.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed operands must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    l, m_max, kw_max = w_stack.shape
+    kw_in, n = xp.shape
+    has_final = final_wp is not None
+    mf = final_wp.shape[0] if has_final else 0
+    block_n, word_group = autotune.resolve_megakernel_block_n(
+        l, m_max, kw_max, n, block_n, word_group, final_m=mf,
+    )
+    # Group-align the stacked K axis (extra zero weight words against
+    # all-ones activation rows are xnor-neutral) so the dynamic-trip
+    # accumulator's slices can never clamp-and-double-count.
+    pg = -kw_max % max(1, word_group)
+    if pg:
+        w_stack = jnp.pad(w_stack, ((0, 0), (0, 0), (0, pg)))
+        kw_max += pg
+    kw_act = max(kw_max, m_max // PACK_BITS)
+    pn = -n % block_n
+    pkw = kw_act - kw_in
+    if pkw or pn:
+        xp = jnp.pad(xp, ((0, pkw), (0, pn)), constant_values=-1)
+    fin = None
+    if has_final:
+        # M rows need no 32-alignment here (no repack on the final dot);
+        # pad to the 8-row sublane multiple with zero weight words — the
+        # garbage rows are sliced off below.
+        pmf = -mf % 8
+        fin = jnp.pad(final_wp, ((0, pmf), (0, 0))) if pmf else final_wp
+    # Per-layer dynamic trip counts: each stacked layer walks only ITS
+    # ceil(ceil(k/32) / word_group) K-word groups of the shared KW_max.
+    kw_true = [-(-k // PACK_BITS) for k in k_bits]
+    n_groups = [-(-kw_l // word_group) for kw_l in kw_true]
+    out = mega_kernel.megakernel_chain(
+        w_stack, a_stack, b_stack,
+        jnp.asarray(k_bits, jnp.int32)[:, None],
+        jnp.asarray(n_groups, jnp.int32)[:, None], xp, fin,
+        block_n=block_n, word_group=word_group,
+        final_k_bits=final_k_bits, interpret=interpret,
+    )
+    rows = mf if has_final else -(-m_out // PACK_BITS)
+    return out[:rows, :n]
+
+
+def megakernel_conv_stage(
+    xp: jnp.ndarray,
+    weights: tuple[jnp.ndarray, ...],
+    a: tuple[jnp.ndarray, ...],
+    b: tuple[jnp.ndarray, ...],
+    k_bits: tuple[int, ...],
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    pad: int = 1,
+    pool: bool = True,
+    word_group: int | str = AUTO,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Padded, dispatching conv-stage megakernel (DESIGN.md §8): the
+    stage's fused direct convs + packed-OR maxpool in ONE launch, one
+    program per image, intermediate maps never touching HBM.
+
+    ``xp [N, H, W, CW]`` channel-packed; ``weights[l] [D_l, kH*kW*
+    CW_l]`` tap-aligned TRUE-shape filters with 1-D ``a[l]``/``b[l]
+    [D_l]`` folded affines (``pack_conv_fused`` layer dicts provide
+    exactly these). This wrapper applies the all-ones spatial border
+    and the ``a=0, b=+1`` D-padding to whole words; output channel
+    words need no slicing — ``D_pad/32 == ceil(D/32)`` and the tail
+    bits are +1, the activation-pad convention. Returns the stage's
+    packed output map ``[N, OH', OW', ceil(D_last/32)]``.
+    """
+    if xp.dtype != PACKED_DTYPE:
+        raise TypeError(f"packed operands must be {PACKED_DTYPE}")
+    interpret = _default_interpret() if interpret is None else interpret
+    if autotune._is_auto(word_group):
+        word_group = autotune.DEFAULT_WORD_GROUP
+    if pad:
+        xp = jnp.pad(xp, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                     constant_values=-1)
+    ws, aps, bps = [], [], []
+    for wl, al, bl in zip(weights, a, b):
+        d = wl.shape[0]
+        pd = -d % PACK_BITS
+        ws.append(jnp.pad(wl, ((0, pd), (0, 0))) if pd else wl)
+        aps.append(jnp.pad(al.astype(jnp.float32), (0, pd))[:, None])
+        bps.append(jnp.pad(bl.astype(jnp.float32), (0, pd),
+                           constant_values=1.0)[:, None])
+    return mega_kernel.megakernel_conv_stage(
+        xp, tuple(ws), tuple(aps), tuple(bps),
+        k_bits=tuple(k_bits), kh=kh, kw=kw, pool=pool,
+        word_group=int(word_group), interpret=interpret,
+    )
+
+
 __all__ = [
     "xnor_gemm",
     "unpack_gemm",
@@ -276,4 +415,6 @@ __all__ = [
     "fused_xnor_gemm",
     "fused_direct_conv",
     "direct_conv",
+    "megakernel_chain",
+    "megakernel_conv_stage",
 ]

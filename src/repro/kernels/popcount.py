@@ -34,7 +34,22 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.bitops import PACK_BITS
+
 DEFAULT_WORD_GROUP = 8
+
+
+def sign_repack_m(y: jnp.ndarray) -> jnp.ndarray:
+    """The fused kernels' shared sign+repack epilogue tail:
+    ``[M, N]`` (any real dtype) -> packed int32 ``[M/32, N]`` with
+    ``bit = (y >= 0)``, LSB-first along M. ``M`` must divide by 32 —
+    every fused kernel guarantees this by construction (``block_m`` /
+    ``block_d`` / ``M_max`` are 32-multiples)."""
+    m, n = y.shape
+    bits = (y >= 0).astype(jnp.int32)
+    bits = bits.reshape(m // PACK_BITS, PACK_BITS, n)
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.int32)
+    return jnp.sum(bits << shifts[None, :, None], axis=1)
 
 
 def _word_pc(w_col: jnp.ndarray, x_row: jnp.ndarray) -> jnp.ndarray:
@@ -73,6 +88,43 @@ def accum_popcount_km(
     return acc
 
 
+def accum_popcount_km_dyn(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    n_groups: jnp.ndarray,
+    *,
+    word_group: int = DEFAULT_WORD_GROUP,
+) -> jnp.ndarray:
+    """:func:`accum_popcount_km` with a TRACED trip count: walk only the
+    first ``n_groups * word_group`` packed K-words of the operands.
+
+    This is the megakernel-chain accumulator (DESIGN.md §8): layers of
+    different true K share one padded ``[L, M_max, KW_max]`` weight
+    stack, and a per-layer ``n_groups = ceil(ceil(k/32) / word_group)``
+    keeps each ``lax.fori_loop`` layer iteration from paying the
+    stack-wide KW_max — a ragged layer walks its own K only. Words
+    between the true K and the group boundary must be xnor-neutral
+    pairs (zero weight words against all-ones activation words — the
+    stacking convention guarantees this), so the group-aligned
+    overshoot contributes exactly zero. ``KW`` must divide by
+    ``word_group`` and ``n_groups * word_group <= KW`` (else the
+    clamped dynamic slice would double-count the tail).
+    """
+    m, kw = w.shape
+    _, n = x.shape
+    g = max(1, word_group)
+    assert kw % g == 0, (kw, g)
+
+    def body(t, acc):
+        wg = lax.dynamic_slice_in_dim(w, t * g, g, axis=1)  # [M, g]
+        xg = lax.dynamic_slice_in_dim(x, t * g, g, axis=0)  # [g, N]
+        for i in range(g):
+            acc = acc + _word_pc(wg[:, i : i + 1], xg[i : i + 1, :])
+        return acc
+
+    return lax.fori_loop(0, n_groups, body, jnp.zeros((m, n), jnp.int32))
+
+
 def accum_popcount_rows(
     w: jnp.ndarray, x: jnp.ndarray, *, word_group: int = DEFAULT_WORD_GROUP
 ) -> jnp.ndarray:
@@ -104,4 +156,10 @@ def accum_popcount_rows(
     return acc
 
 
-__all__ = ["DEFAULT_WORD_GROUP", "accum_popcount_km", "accum_popcount_rows"]
+__all__ = [
+    "DEFAULT_WORD_GROUP",
+    "accum_popcount_km",
+    "accum_popcount_km_dyn",
+    "accum_popcount_rows",
+    "sign_repack_m",
+]

@@ -29,13 +29,20 @@ from repro.core.bnn import (
     bnn_apply_fused,
     init_bnn_params,
     pack_bnn_params_fused,
+    pack_bnn_params_megakernel,
 )
 from repro.serve import DEFAULT_BUCKETS, ServingEngine, load_serving_blocks
 
 
 def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
     params = init_bnn_params(jax.random.PRNGKey(args.seed))
-    fused = pack_bnn_params_fused(params)
+    if args.engine.startswith("megakernel"):
+        # one-launch-per-stage executors (DESIGN.md §8) take the
+        # pre-stacked megakernel params; conv_impl is direct-path by
+        # construction and ignored.
+        fused = pack_bnn_params_megakernel(params)
+    else:
+        fused = pack_bnn_params_fused(params)
     blocks = "auto"
     if args.blocks == "tuned":
         # deployment config saved by benchmarks/serving.py (or any
@@ -96,10 +103,20 @@ def run_smoke(args) -> dict:
     mismatches = 0
     for rid, imgs in zip(rids, requests):
         got = eng.take(rid)
-        want = np.asarray(
-            bnn_apply_fused(eng.executors.packed, imgs,
-                            engine=args.engine, conv_impl=args.conv_impl)
-        )
+        if args.engine.startswith("megakernel"):
+            from repro.core.bnn import bnn_apply_megakernel
+
+            inner = "xnor" if args.engine == "megakernel" else "xla"
+            want = np.asarray(
+                bnn_apply_megakernel(eng.executors.packed, imgs,
+                                     engine=inner)
+            )
+        else:
+            want = np.asarray(
+                bnn_apply_fused(eng.executors.packed, imgs,
+                                engine=args.engine,
+                                conv_impl=args.conv_impl)
+            )
         if got is None or not np.array_equal(got, want):
             mismatches += 1
     snap = eng.snapshot()
@@ -149,9 +166,14 @@ def run_sustained(args) -> dict:
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--engine", default="xla", choices=["xla", "xnor"],
-                    help="fused kernel path: pure-XLA fallback (CPU-fast) "
-                         "or Pallas (interpret off-TPU)")
+    ap.add_argument("--engine", default="xla",
+                    choices=["xla", "xnor", "megakernel", "megakernel_xla"],
+                    help="xla/xnor: per-layer fused chain (pure-XLA "
+                         "fallback, CPU-fast / Pallas, interpret "
+                         "off-TPU); megakernel/megakernel_xla: one "
+                         "launch per network stage (DESIGN.md §8) — "
+                         "uses megakernel-packed params and ignores "
+                         "--conv-impl")
     ap.add_argument("--conv-impl", default="im2col",
                     choices=["im2col", "direct"])
     ap.add_argument("--buckets", type=lambda s: tuple(

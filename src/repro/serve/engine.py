@@ -26,10 +26,13 @@ from repro.serve.stats import ServeStats
 class ServingEngine:
     """Batched inference over the fused packed BNN.
 
-    ``packed_params`` comes from ``core.bnn.pack_bnn_params_fused``.
-    ``engine``/``conv_impl``/``blocks`` select the kernel path exactly
-    as in ``bnn_apply_fused``; ``buckets``/``max_wait_s`` shape the
-    batching policy; ``clock`` is injectable for deterministic tests.
+    ``packed_params`` comes from ``core.bnn.pack_bnn_params_fused`` —
+    or ``pack_bnn_params_megakernel`` when ``engine`` is
+    ``"megakernel"``/``"megakernel_xla"`` (one launch per network
+    stage, DESIGN.md §8). ``engine``/``conv_impl``/``blocks`` select
+    the kernel path exactly as in ``bnn_serve_fn``; ``buckets``/
+    ``max_wait_s`` shape the batching policy; ``clock`` is injectable
+    for deterministic tests.
     """
 
     def __init__(

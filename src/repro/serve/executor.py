@@ -12,6 +12,15 @@ each Pallas launch inside the traced program resolves its tiles through
 the PR-3 autotune cache (``kernels/autotune.py``): a ladder warmed once
 on a machine with a populated cache compiles straight to the tuned
 tilings, no re-measurement in the serving path.
+
+``engine`` accepts every :data:`repro.core.bnn.SERVE_ENGINES` value:
+``"xla"``/``"xnor"`` dispatch the per-layer fused chain
+(``pack_bnn_params_fused`` params), ``"megakernel"``/
+``"megakernel_xla"`` dispatch one-launch-per-stage megakernel forwards
+(``pack_bnn_params_megakernel`` params, DESIGN.md §8) — the bucket
+ladder, cache keys and steady-state compile invariant are identical,
+so a deployment flips engines by constructing the cache with the
+matching packed params and engine string.
 """
 
 from __future__ import annotations

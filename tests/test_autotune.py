@@ -80,6 +80,42 @@ def test_cache_tolerates_garbage_file(cache_file, content):
     assert autotune.load_entry("xnor_gemm", shape) == BlockConfig()
 
 
+def test_cache_survives_torn_write(cache_file):
+    """Satellite (ISSUE 5): a torn write — a writer killed mid-file, so
+    the cache holds a truncated JSON prefix — must be IGNORED, not
+    fatal: lookups miss, "auto" resolution falls back to heuristics,
+    and the next save repairs the file."""
+    cfg = BlockConfig(block_m=64, block_n=128, block_kw=4)
+    shape = {"m": 64, "kw": 8, "n": 64}
+    autotune.save_entry("xnor_gemm", shape, cfg, wall_s=0.5)
+    whole = cache_file.read_text()
+    cache_file.write_text(whole[: len(whole) // 2])  # torn mid-write
+
+    assert autotune.load_entry("xnor_gemm", shape) is None
+    bm, bn, bkw, wg = autotune.resolve_gemm_blocks(
+        "xnor_gemm", 64, 8, 64, "auto", "auto", "auto", "auto"
+    )
+    assert all(isinstance(v, int) for v in (bm, bn, bkw, wg))
+    # save over the torn file repairs it
+    autotune.save_entry("xnor_gemm", shape, cfg, wall_s=0.5)
+    assert autotune.load_entry("xnor_gemm", shape) == cfg
+    json.loads(cache_file.read_text())  # valid JSON again
+
+
+def test_cache_write_is_atomic_no_stray_temp(cache_file):
+    """The atomic-publish path: after a save the directory holds ONLY
+    the cache file (unique temp staged then os.replace'd — concurrent
+    writers can never interleave into one shared temp), and repeated
+    saves keep every prior entry."""
+    autotune.save_entry("a", {"m": 1}, BlockConfig(block_m=8))
+    autotune.save_entry("b", {"m": 2}, BlockConfig(block_m=16))
+    assert sorted(p.name for p in cache_file.parent.iterdir()) == [
+        cache_file.name
+    ]
+    assert autotune.load_entry("a", {"m": 1}) == BlockConfig(block_m=8)
+    assert autotune.load_entry("b", {"m": 2}) == BlockConfig(block_m=16)
+
+
 def test_cache_disabled_by_env(cache_file, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE", "0")
     assert not autotune.cache_enabled()
@@ -190,6 +226,35 @@ def test_tuned_config_bit_identical(cache_file):
     )
     auto = ops.xnor_gemm(wp, xp, k, interpret=True)  # block_*="auto"
     np.testing.assert_array_equal(np.asarray(auto), np.asarray(fixed))
+
+
+def test_unpack_gemm_auto_blocks_ragged(cache_file):
+    """Satellite (ISSUE 5): unpack_gemm now resolves AUTO blocks (the
+    last fixed-tile wrapper) and clamps explicit ints, so ragged shapes
+    — the 10-output head with K % 32 != 0 — never trip the kernel's
+    divisibility asserts, with results identical to the XLA unpack."""
+    from repro.core import bitops
+
+    m, k, n = 10, 40, 3
+    key = jax.random.PRNGKey(2)
+    w = jnp.where(jax.random.bernoulli(key, 0.5, (m, k)), 1.0, -1.0)
+    wpad = jnp.pad(w, ((0, 0), (0, -k % PACK_BITS)), constant_values=-1.0)
+    wp = bitops.pack_bits(wpad, axis=-1)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    xz = jnp.pad(x, ((0, -k % PACK_BITS), (0, 0)))  # zero K-pad rows
+    want = np.asarray(w @ x)
+    got = ops.unpack_gemm(wp, xz, interpret=True)[:, :n]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    # oversized explicit blocks are clamped, not fatal
+    got2 = ops.unpack_gemm(wp, xz, block_m=512, block_n=1024, block_kw=64,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(got))
+    # the unpack VMEM model is the one consulted: modeled footprint of
+    # the heuristic config fits the budget
+    cfg = autotune.heuristic_gemm_blocks(m, wp.shape[1], n, unpack=True)
+    assert autotune.gemm_step_vmem(
+        cfg.block_m, cfg.block_n, cfg.block_kw, unpack=True
+    ) <= autotune.VMEM_BUDGET_BYTES
 
 
 def test_block_kwargs_surface():

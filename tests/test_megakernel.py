@@ -1,0 +1,327 @@
+"""Megakernel (DESIGN.md §8): chain/conv-stage kernels bit-exact vs
+their XLA oracles and the per-layer fused pipeline, stacked-padding
+conventions, block-config invariance, and BNN-level logits parity
+across engine x conv_impl x blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops
+from repro.core.layers import pack_conv_aligned, stack_chain_layers
+from repro.kernels import ops as kops
+from repro.kernels.autotune import BlockConfig
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand_fused_layer(key, m, k):
+    """One fused-layer param dict {w_packed, a, b} with ragged-K packing
+    (weight pad bits -1, the pack_linear_params convention)."""
+    kw = -(-k // 32)
+    w = jax.random.normal(key, (m, k))
+    wpad = jnp.pad(w, ((0, 0), (0, kw * 32 - k)), constant_values=-1.0)
+    return {
+        "w_packed": bitops.pack_bits(wpad, axis=-1),
+        "a": jax.random.normal(jax.random.fold_in(key, 1), (m,)),
+        "b": jax.random.normal(jax.random.fold_in(key, 2), (m,)),
+    }
+
+
+def _rand_packed_acts(key, k, n):
+    """Packed [ceil(k/32), N] activations with +1 K-pad bits."""
+    x = jax.random.normal(key, (k, n))
+    xpad = jnp.pad(x, ((0, -k % 32), (0, 0)), constant_values=1.0)
+    return bitops.pack_bits(xpad, axis=0)
+
+
+def _chain_fixture(dims=(70, 50, 40, 33), n=8):
+    """Ragged chain: per-layer params, stacked operands, packed input."""
+    layers, k_bits = [], []
+    for i in range(len(dims) - 1):
+        k, m = dims[i], dims[i + 1]
+        layers.append(_rand_fused_layer(jax.random.fold_in(KEY, 10 + i), m, k))
+        k_bits.append(k)
+    stack = stack_chain_layers(layers)
+    xp = _rand_packed_acts(jax.random.fold_in(KEY, 99), dims[0], n)
+    return layers, stack, tuple(k_bits), xp, dims
+
+
+def _seq_fused_reference(layers, k_bits, xp):
+    """The per-layer reference: sequential fused_xnor_layer calls."""
+    act = xp
+    for p, k in zip(layers, k_bits):
+        act = bitops.fused_xnor_layer(
+            p["w_packed"], act[: p["w_packed"].shape[1]], k, p["a"], p["b"]
+        )
+    return act
+
+
+# ---------------------------------------------------------------------------
+# Chain kernel
+# ---------------------------------------------------------------------------
+
+def test_chain_matches_per_layer_fused_ragged():
+    """One-launch chain == sequential fused layers, bit for bit, on a
+    fully ragged chain (no dim is a multiple of 32)."""
+    layers, stack, k_bits, xp, dims = _chain_fixture()
+    want = _seq_fused_reference(layers, k_bits, xp)
+    got = kops.megakernel_chain(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1]
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_chain_oracle_matches_kernel():
+    layers, stack, k_bits, xp, dims = _chain_fixture()
+    want = bitops.megakernel_chain_xla(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1]
+    )
+    got = kops.megakernel_chain(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1]
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_chain_final_gemm_matches_packed_head():
+    """The in-launch epilogue-free head == a standalone xnor GEMM on
+    the chain output (the ragged 10-class CIFAR head shape)."""
+    layers, stack, k_bits, xp, dims = _chain_fixture()
+    final_k = dims[-1]
+    fin = _rand_fused_layer(jax.random.fold_in(KEY, 77), 10, final_k)
+    chain_out = _seq_fused_reference(layers, k_bits, xp)
+    want = bitops.xnor_popcount_matmul(
+        fin["w_packed"], chain_out[: fin["w_packed"].shape[1]], final_k
+    )
+    for engine_out in (
+        kops.megakernel_chain(
+            stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+            final_wp=fin["w_packed"], final_k_bits=final_k,
+        ),
+        bitops.megakernel_chain_xla(
+            stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+            final_wp=fin["w_packed"], final_k_bits=final_k,
+        ),
+    ):
+        np.testing.assert_array_equal(np.asarray(engine_out),
+                                      np.asarray(want))
+
+
+def test_chain_block_config_invariance():
+    """block_n / word_group are pure performance knobs: every tiling
+    (including ragged word groups and batch splits) is bit-identical."""
+    layers, stack, k_bits, xp, dims = _chain_fixture(n=16)
+    want = _seq_fused_reference(layers, k_bits, xp)
+    for bn, wg in [(8, 3), (16, 1), (128, 16)]:
+        got = kops.megakernel_chain(
+            stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+            block_n=bn, word_group=wg,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"block_n={bn} word_group={wg}",
+        )
+
+
+def test_stacked_padding_conventions():
+    """stack_chain_layers emits the exact pad values the chain kernel's
+    neutrality argument relies on: zero weight rows/words, a=0, b=+1."""
+    layers, stack, k_bits, _, dims = _chain_fixture()
+    l = len(layers)
+    m_max = stack["w"].shape[1]
+    for i, p in enumerate(layers):
+        m, kw = p["w_packed"].shape
+        np.testing.assert_array_equal(
+            np.asarray(stack["w"][i, :m, :kw]), np.asarray(p["w_packed"])
+        )
+        assert not np.asarray(stack["w"][i, m:]).any()
+        assert not np.asarray(stack["w"][i, :, kw:]).any()
+        assert not np.asarray(stack["a"][i, m:]).any()
+        np.testing.assert_array_equal(
+            np.asarray(stack["b"][i, m:]), np.ones(m_max - m, np.float32)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Conv-stage kernel
+# ---------------------------------------------------------------------------
+
+def _conv_stage_fixture(chans=(40, 50, 70), hw=8, n=2):
+    """Ragged-channel two-conv stage: per-layer aligned packed filters,
+    affines, channel-packed input map."""
+    weights, a, b, k_bits = [], [], [], []
+    for l in range(len(chans) - 1):
+        cin, cout = chans[l], chans[l + 1]
+        wkey = jax.random.fold_in(KEY, 30 + l)
+        p = pack_conv_aligned(
+            {"w": jax.random.normal(wkey, (cout, 3, 3, cin))}
+        )
+        weights.append(p["w_packed"])
+        a.append(jax.random.normal(jax.random.fold_in(wkey, 1), (cout,)))
+        b.append(jax.random.normal(jax.random.fold_in(wkey, 2), (cout,)))
+        k_bits.append(3 * 3 * cin)
+    x = jax.random.normal(jax.random.fold_in(KEY, 40), (n, hw, hw, chans[0]))
+    xp = bitops.pack_channels(jnp.clip(x, -1, 1))
+    return tuple(weights), tuple(a), tuple(b), tuple(k_bits), xp
+
+
+@pytest.mark.parametrize("pool", [True, False])
+def test_conv_stage_matches_per_layer_oracle(pool):
+    """One-launch conv stage == chained direct_conv_oracle (+ OR-pool),
+    bit for bit, with ragged channel counts at every boundary."""
+    weights, a, b, k_bits, xp = _conv_stage_fixture()
+    want = bitops.conv_stage_xla(xp, weights, a, b, k_bits, pool=pool)
+    got = kops.megakernel_conv_stage(xp, weights, a, b, k_bits, pool=pool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_stage_single_layer():
+    """A one-conv stage (the CIFAR net's first pool stage) matches the
+    standalone fused direct conv + packed pool."""
+    weights, a, b, k_bits, xp = _conv_stage_fixture(chans=(40, 50))
+    per_layer = kops.fused_direct_conv(
+        weights[0], xp, k_bits[0], a[0], b[0], kh=3, kw=3, stride=1, pad=1
+    )
+    want = bitops.maxpool2_packed(per_layer)
+    got = kops.megakernel_conv_stage(xp, weights, a, b, k_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_stage_word_group_invariance():
+    weights, a, b, k_bits, xp = _conv_stage_fixture(n=1)
+    want = kops.megakernel_conv_stage(xp, weights, a, b, k_bits)
+    for wg in (1, 3, 64):
+        got = kops.megakernel_conv_stage(
+            xp, weights, a, b, k_bits, word_group=wg
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=f"word_group={wg}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# BNN-level: logits parity across engine x conv_impl x blocks
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bnn_setup():
+    from repro.core.bnn import (
+        init_bnn_params,
+        pack_bnn_params_fused,
+        pack_bnn_params_megakernel,
+    )
+
+    params = init_bnn_params(jax.random.PRNGKey(42))
+    images = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 32, 32, 3))
+    return (
+        pack_bnn_params_fused(params),
+        pack_bnn_params_megakernel(params),
+        images,
+    )
+
+
+def test_bnn_megakernel_matches_fused_all_combos(bnn_setup):
+    """Acceptance invariant (ISSUE 5): megakernel logits bit-identical
+    to bnn_apply_fused for every fused engine x conv_impl (and both
+    megakernel engines) — the ragged 10-class head included."""
+    from repro.core.bnn import bnn_apply_fused, bnn_apply_megakernel
+
+    fused, mega, images = bnn_setup
+    want = bnn_apply_fused(fused, images, engine="xla")
+    got = bnn_apply_megakernel(mega, images, engine="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # interpret-mode Pallas engines at tiny scale
+    small = images[:2]
+    want_small = np.asarray(want[:2])
+    got_xnor = bnn_apply_megakernel(mega, small, engine="xnor")
+    np.testing.assert_array_equal(np.asarray(got_xnor), want_small)
+    for engine in ("xla", "xnor"):
+        for conv_impl in ("im2col", "direct"):
+            ref = bnn_apply_fused(fused, small, engine=engine,
+                                  conv_impl=conv_impl)
+            np.testing.assert_array_equal(
+                np.asarray(ref), want_small,
+                err_msg=f"fused {engine}/{conv_impl} drifted",
+            )
+
+
+def test_bnn_megakernel_block_config_invariance(bnn_setup):
+    from repro.core.bnn import bnn_apply_megakernel
+
+    fused, mega, images = bnn_setup
+    small = images[:2]
+    want = np.asarray(bnn_apply_megakernel(mega, small, engine="xla"))
+    for blocks in (
+        "auto",
+        BlockConfig(block_n=128, word_group=4),
+        BlockConfig(block_n=256, word_group=32),
+    ):
+        got = bnn_apply_megakernel(mega, small, engine="xnor",
+                                   blocks=blocks)
+        np.testing.assert_array_equal(
+            np.asarray(got), want, err_msg=f"blocks={blocks}"
+        )
+
+
+def test_pack_bnn_params_megakernel_structure(bnn_setup):
+    """The megakernel pack pre-stacks the FC trunk at pack time and
+    keeps the fused per-layer conv params (true shapes, tap-aligned)."""
+    from repro.core.bnn import FC_SIZES
+
+    fused, mega, _ = bnn_setup
+    l = len(FC_SIZES) - 1
+    m_max = max(f for _, f in FC_SIZES[:-1])
+    kw_max = max(-(-f // 32) for f, _ in FC_SIZES[:-1])
+    assert mega["fc_stack"]["w"].shape == (l, m_max, kw_max)
+    assert mega["fc_stack"]["a"].shape == (l, m_max)
+    assert set(mega["fc_final"]) >= {"w_packed", "b"}
+    for pf, pm in zip(fused["conv"][1:], mega["conv"][1:]):
+        np.testing.assert_array_equal(
+            np.asarray(pf["w_packed"]), np.asarray(pm["w_packed"])
+        )
+
+
+def test_megakernel_vmem_model_and_resolution():
+    """The weights-resident VMEM model admits the CIFAR FC trunk and
+    the resolver clamps the batch tile to the padded batch."""
+    from repro.kernels import autotune
+
+    assert autotune.megakernel_vmem(2, 1024, 256, 128, final_m=16) \
+        <= autotune.MEGAKERNEL_VMEM_BUDGET
+    bn, wg = autotune.resolve_megakernel_block_n(
+        2, 1024, 256, 4, "auto", "auto", final_m=16
+    )
+    assert bn == 128 and wg >= 1  # clamped to round_up(4, 128)
+    bn, _ = autotune.resolve_megakernel_block_n(
+        2, 1024, 256, 4, 512, 8, final_m=16
+    )
+    assert bn == 128  # explicit request clamped too
+
+
+def test_megakernel_tune_block_n_caches(tmp_path, monkeypatch):
+    """tune_block_n persists a bnn_megakernel entry the resolver then
+    serves (same staleness-stamped cache as every other kernel)."""
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    layers, stack, k_bits, xp, dims = _chain_fixture(n=256)
+    shape = autotune.megakernel_shape(*stack["w"].shape, 256)
+
+    def fn(bn):
+        return kops.megakernel_chain(
+            stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+            block_n=bn,
+        )
+
+    timings = {}
+    best = autotune.tune_block_n(
+        autotune.MEGAKERNEL_KERNEL, shape, fn, candidates=(64, 256),
+        repeats=1, timings=timings,
+    )
+    assert best in (64, 256) and set(timings) == {64, 256}
+    l, m_max, kw_max = stack["w"].shape
+    bn, _ = autotune.resolve_megakernel_block_n(
+        l, m_max, kw_max, 256, "auto", 8
+    )
+    assert bn == best

@@ -23,7 +23,12 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import bitops
 from repro.core.binarize import QuantMode
-from repro.core.layers import BitLinearConfig, bit_linear, pack_linear_params
+from repro.core.layers import (
+    BitLinearConfig,
+    bit_linear,
+    pack_linear_params,
+    stack_chain_layers,
+)
 from repro.distributed import compression, sharding
 from repro.kernels import ops, ref
 
@@ -288,3 +293,53 @@ def test_sharding_specs_always_divide(dims, pod, data, model):
             axes = ax if isinstance(ax, tuple) else (ax,)
             size = int(np.prod([mesh.shape[a] for a in axes]))
             assert dim % size == 0, (path, dims, spec)
+
+
+@given(
+    dims=st.lists(st.integers(1, 80), min_size=2, max_size=5),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_stacked_chain_padding_roundtrip_property(dims, seed):
+    """Megakernel stacking (ISSUE 5): stack_chain_layers is lossless —
+    slicing the padded [L, M_max, KW_max] stack recovers every layer's
+    packed words and affines exactly, and every pad element carries the
+    xnor-neutral convention (zero weight words, a=0, b=+1), for ANY
+    ragged chain of layer sizes."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i in range(len(dims) - 1):
+        k, m = dims[i], dims[i + 1]
+        kw = -(-k // 32)
+        w = np.sign(rng.normal(size=(m, kw * 32))) + 0.0
+        w[w == 0] = 1.0
+        w[:, k:] = -1.0  # ragged-K weight pad bits
+        layers.append({
+            "w_packed": bitops.pack_bits(jnp.asarray(w), axis=1),
+            "a": jnp.asarray(rng.normal(size=m).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=m).astype(np.float32)),
+        })
+    stack = stack_chain_layers(layers)
+    l = len(layers)
+    m_max = max(-(-p["w_packed"].shape[0] // 32) * 32 for p in layers)
+    kw_max = max(p["w_packed"].shape[1] for p in layers)
+    assert stack["w"].shape == (l, m_max, kw_max)
+    for i, p in enumerate(layers):
+        m, kw = p["w_packed"].shape
+        np.testing.assert_array_equal(
+            np.asarray(stack["w"][i, :m, :kw]), np.asarray(p["w_packed"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(stack["a"][i, :m]), np.asarray(p["a"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(stack["b"][i, :m]), np.asarray(p["b"])
+        )
+        # pad conventions: zero weight rows/words, a=0, b=+1
+        assert not np.asarray(stack["w"][i, m:]).any()
+        assert not np.asarray(stack["w"][i, :, kw:]).any()
+        assert not np.asarray(stack["a"][i, m:]).any()
+        np.testing.assert_array_equal(
+            np.asarray(stack["b"][i, m:]),
+            np.ones(m_max - m, np.float32),
+        )

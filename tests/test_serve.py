@@ -344,3 +344,74 @@ def test_serve_fn_matches_apply_fused(fused_params, images):
     got = np.asarray(fn(fused_params, images[:2]))
     want = np.asarray(bnn_apply_fused(fused_params, images[:2]))
     np.testing.assert_array_equal(got, want)
+
+
+def test_serve_fn_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="unknown serving engine"):
+        bnn_serve_fn(engine="warp-drive")
+
+
+# ---------------------------------------------------------------------------
+# Megakernel engine (ISSUE 5): the bucket ladder dispatches
+# one-launch-per-stage executors
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mega_params():
+    from repro.core.bnn import pack_bnn_params_megakernel
+
+    return pack_bnn_params_megakernel(init_bnn_params(KEY))
+
+
+@pytest.mark.parametrize("engine", ["megakernel_xla", "megakernel"])
+def test_padding_neutral_logits_megakernel(mega_params, fused_params,
+                                           images, engine):
+    """Bucket padding stays bit-neutral under the megakernel engines,
+    and the padded logits still equal the FUSED chain's (the serving
+    cache may mix engines across deployments without drift)."""
+    from repro.core.bnn import bnn_apply_megakernel
+
+    n, bucket = (1, 2) if engine == "megakernel" else (3, 8)
+    imgs = np.asarray(images[:n])
+    inner = "xnor" if engine == "megakernel" else "xla"
+    exact = np.asarray(
+        bnn_apply_megakernel(mega_params, jnp.asarray(imgs), engine=inner)
+    )
+    padded_out = np.asarray(
+        bnn_apply_megakernel(
+            mega_params, jnp.asarray(pad_to_bucket(imgs, bucket)),
+            engine=inner,
+        )
+    )
+    np.testing.assert_array_equal(padded_out[:n], exact)
+    want = np.asarray(
+        bnn_apply_fused(fused_params, jnp.asarray(imgs), engine="xla")
+    )
+    np.testing.assert_array_equal(exact, want)
+
+
+def test_engine_serves_megakernel_requests_bit_identical(mega_params,
+                                                         images):
+    """End-to-end ServingEngine on engine="megakernel_xla": ragged
+    requests through the bucket ladder come back bit-identical to
+    exact-shape megakernel execution, steady state compiles == buckets."""
+    from repro.core.bnn import bnn_apply_megakernel
+
+    clk = FakeClock()
+    eng = ServingEngine(mega_params, engine="megakernel_xla",
+                        buckets=(1, 4), max_wait_s=0.0, clock=clk)
+    warmed = eng.warmup()
+    imgs = np.asarray(images)
+    requests = {}
+    for sl in (slice(0, 3), slice(3, 4), slice(4, 8)):
+        requests[eng.submit(imgs[sl])] = imgs[sl]
+        eng.step()
+    eng.drain()
+    for rid, x in requests.items():
+        got = eng.take(rid)
+        want = np.asarray(
+            bnn_apply_megakernel(mega_params, jnp.asarray(x), engine="xla")
+        )
+        np.testing.assert_array_equal(got, want)
+    snap = eng.snapshot()
+    assert snap["executors"]["compiles"] == warmed == 2
