@@ -340,6 +340,38 @@ def megakernel_chain_xla(
     return act[: -(-m_out // PACK_BITS)]
 
 
+def megakernel_chain_ragged_xla(
+    w_stack: jnp.ndarray,
+    a_stack: jnp.ndarray,
+    b_stack: jnp.ndarray,
+    k_bits: tuple[int, ...],
+    xp: jnp.ndarray,
+    m_out: int,
+    n_real: int,
+    *,
+    final_wp: jnp.ndarray = None,
+    final_k_bits: int = 0,
+) -> jnp.ndarray:
+    """Ragged/masked-tail oracle (DESIGN.md §9): the reference for the
+    megakernel's variable-extent batch path.
+
+    ``xp [KW_in, N_pad]`` is a TILE-padded batch (N_pad only rounds the
+    true extent ``n_real`` up to the batch-tile multiple, not a bucket
+    rung). Runs :func:`megakernel_chain_xla` on the padded batch — pad
+    columns are all-ones packed activations, per-sample independent, so
+    real columns are untouched — then zeroes every output column at or
+    after ``n_real``, exactly as the kernel's tail grid step masks its
+    overhang. ``tests/test_megakernel.py`` asserts the kernel against
+    this, pad columns included.
+    """
+    out = megakernel_chain_xla(
+        w_stack, a_stack, b_stack, k_bits, xp, m_out,
+        final_wp=final_wp, final_k_bits=final_k_bits,
+    )
+    cols = jnp.arange(out.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.where(cols < jnp.int32(n_real), out, 0)
+
+
 def conv_stage_xla(
     xp: jnp.ndarray,
     weights: tuple[jnp.ndarray, ...],

@@ -329,6 +329,7 @@ def bnn_apply_megakernel(
     engine: str = "xnor",
     use_scale: bool = False,
     blocks: object = "auto",
+    ragged: bool = False,
 ) -> jnp.ndarray:
     """Megakernel inference: ONE launch per network stage, packed
     activations never touching HBM inside a stage (DESIGN.md §8).
@@ -350,6 +351,13 @@ def bnn_apply_megakernel(
     HBM. ``engine="xnor"`` runs the Pallas megakernels (interpret mode
     off-TPU); ``engine="xla"`` the pure-XLA oracles (SPMD-safe, and the
     parity reference). ``blocks`` forwards ``block_n``/``word_group``.
+
+    ``ragged`` (DESIGN.md §9) routes the FC-trunk launch through the
+    masked-tail batch path for variable-extent continuous-batching
+    dispatch — batch pads only to the sublane tile, not a ``block_n``
+    rung. Conv stages run one program per image and already scale
+    exactly with N, so only the trunk changes; logits stay
+    bit-identical either way.
     """
     lcfg = BitLinearConfig(
         mode=QuantMode.FAKE_QUANT, binarize_acts=False, use_scale=use_scale
@@ -374,7 +382,7 @@ def bnn_apply_megakernel(
         tuple(fin for fin, _ in FC_SIZES[:-1]),
         FC_SIZES[-2][1],
         final=packed["fc_final"], final_k=FC_SIZES[-1][0],
-        engine=engine, blocks=blocks,
+        engine=engine, blocks=blocks, ragged=ragged,
     )
     return _batchnorm(packed["bn_fc_last"], y, training=False)
 
@@ -391,6 +399,7 @@ def bnn_serve_fn(
     engine: str = "xla",
     conv_impl: str = "im2col",
     blocks: object = "auto",
+    ragged: bool = False,
 ):
     """The serving entry point: a jit-compiled ``(packed, images) ->
     logits`` callable over :func:`bnn_apply_fused` — or, for the
@@ -412,6 +421,12 @@ def bnn_serve_fn(
     of holding both alive. (The CPU backend cannot use donations and
     warns on every compile, so the annotation is applied only where it
     can take effect.)
+
+    ``ragged=True`` (the continuous scheduler's executors) routes the
+    megakernel FC trunk through the masked-tail batch path so variable
+    tile-padded extents pad to the sublane tile, not a ``block_n`` rung
+    (DESIGN.md §9); it is a no-op for the exact-shape XLA engines and
+    the per-layer fused chain.
     """
     if engine not in SERVE_ENGINES:
         raise ValueError(f"unknown serving engine {engine!r}; "
@@ -424,7 +439,7 @@ def bnn_serve_fn(
         @functools.partial(jax.jit, donate_argnums=donate)
         def serve_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
             return bnn_apply_megakernel(
-                packed, images, engine=inner, blocks=blocks,
+                packed, images, engine=inner, blocks=blocks, ragged=ragged,
             )
 
         return serve_fn

@@ -320,6 +320,7 @@ def megakernel_fc_chain(
     final_k: int = 0,
     engine: str = "xnor",
     blocks: object = AUTO,
+    ragged: bool = False,
 ) -> jnp.ndarray:
     """Run a whole FC trunk — stacked fused layers plus (optionally)
     the float-boundary head's GEMM — in one launch.
@@ -332,6 +333,14 @@ def megakernel_fc_chain(
     bias/alpha applied here in float, identical math (and identical
     int32 dot) to :func:`packed_act_linear`, so logits stay
     bit-identical to the per-layer chain.
+
+    ``ragged`` (DESIGN.md §9) routes the xnor launch through the
+    masked-tail batch path: N pads only to the ``RAGGED_TILE_N``
+    sublane tile instead of a full ``block_n`` rung — the variable
+    batch extents of continuous-batching dispatch then cost pad work
+    proportional to the tile, not the rung. The XLA engine is already
+    exact-N, so ``ragged`` is a no-op there; outputs stay bit-identical
+    either way.
     """
     from repro.kernels.autotune import megakernel_block_kwargs
 
@@ -340,6 +349,7 @@ def megakernel_fc_chain(
         out = kops.megakernel_chain(
             stack["w"], stack["a"], stack["b"], tuple(k_bits), xp.T, m_out,
             final_wp=fin_wp, final_k_bits=final_k,
+            ragged_tile=kops.RAGGED_TILE_N if ragged else None,
             **megakernel_block_kwargs(blocks),
         )
     elif engine == "xla":

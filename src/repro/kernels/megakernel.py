@@ -74,8 +74,12 @@ from repro.kernels.popcount import (
 def _chain_kernel(
     w_ref, a_ref, b_ref, kb_ref, ng_ref, x_ref, *rest,
     n_layers: int, kw_act: int, word_group: int, has_final: bool,
-    final_k_bits: int,
+    final_k_bits: int, masked: bool,
 ):
+    if masked:
+        nr_ref, rest = rest[0], rest[1:]
+    else:
+        nr_ref = None
     if has_final:
         wf_ref, o_ref, buf_ref = rest
     else:
@@ -113,9 +117,21 @@ def _chain_kernel(
         # result as a standalone xnor_gemm on the chain's output.
         wf = wf_ref[...]                           # [mf_pad, kwf]
         acc = accum_popcount_km(wf, act[: wf.shape[1]], word_group=word_group)
-        o_ref[...] = 2 * acc - jnp.int32(final_k_bits)
+        out = 2 * acc - jnp.int32(final_k_bits)
     else:
-        o_ref[...] = act[: m_max // PACK_BITS]
+        out = act[: m_max // PACK_BITS]
+    if masked:
+        # Ragged masked tail (DESIGN.md §9): the batch extent is only
+        # tile-padded, so the last grid step may hang past the true
+        # batch — zero every column at/after n_real (columns are
+        # per-sample independent, so the pad columns' garbage never
+        # touched a real column; this just pins their output).
+        bn = out.shape[1]
+        cols = pl.program_id(0) * bn + lax.broadcasted_iota(
+            jnp.int32, (1, bn), 1
+        )
+        out = jnp.where(cols < nr_ref[0, 0], out, 0)
+    o_ref[...] = out
 
 
 @functools.partial(
@@ -130,6 +146,7 @@ def megakernel_chain(
     n_groups: jnp.ndarray,
     xp: jnp.ndarray,
     final_wp: jnp.ndarray | None = None,
+    n_real: jnp.ndarray | None = None,
     *,
     block_n: int = 128,
     word_group: int = DEFAULT_WORD_GROUP,
@@ -154,6 +171,14 @@ def megakernel_chain(
 
     Weights/affines use constant-index BlockSpecs: fetched once,
     VMEM-resident across the whole batch grid.
+
+    ``n_real`` (optional int32 ``[1, 1]``) enables the ragged
+    masked-tail path (DESIGN.md §9): N is then a tile-padded extent
+    rather than a bucket rung, and every output column at/after
+    ``n_real`` is zeroed in-kernel by the tail grid step — the
+    pad-column garbage (columns are per-sample independent) never
+    leaves the launch. Real columns are bit-identical to the unmasked
+    path.
     """
     l, m_max, kw_max = w_stack.shape
     kw_act, n = xp.shape
@@ -173,9 +198,10 @@ def megakernel_chain(
     else:
         out_rows = m_max // PACK_BITS
 
+    masked = n_real is not None
     kernel = functools.partial(
         _chain_kernel, n_layers=l, kw_act=kw_act, word_group=word_group,
-        has_final=has_final, final_k_bits=final_k_bits,
+        has_final=has_final, final_k_bits=final_k_bits, masked=masked,
     )
     in_specs = [
         pl.BlockSpec((l, m_max, kw_max), lambda i: (0, 0, 0)),
@@ -193,6 +219,10 @@ def megakernel_chain(
         n_groups.astype(jnp.int32),
         xp,
     ]
+    if masked:
+        assert n_real.shape == (1, 1), n_real.shape
+        in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
+        operands.append(n_real.astype(jnp.int32))
     if has_final:
         in_specs.append(pl.BlockSpec((mf, kwf), lambda i: (0, 0)))
         operands.append(final_wp)

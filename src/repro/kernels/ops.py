@@ -283,6 +283,9 @@ def pack_rows(
     return out[:, :n]
 
 
+RAGGED_TILE_N = 8  # sublane-multiple batch tile of the ragged chain path
+
+
 def megakernel_chain(
     w_stack: jnp.ndarray,
     a_stack: jnp.ndarray,
@@ -295,6 +298,7 @@ def megakernel_chain(
     final_k_bits: int = 0,
     block_n: int | str = AUTO,
     word_group: int | str = AUTO,
+    ragged_tile: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Padded, dispatching megakernel chain (DESIGN.md §8): ``L``
@@ -313,6 +317,16 @@ def megakernel_chain(
     int32 ±1 dot ``[Mf, N]`` of the float-boundary head (``m_out`` is
     then ignored). ``block_n`` resolves via the ``"bnn_megakernel"``
     autotune entry / weights-resident VMEM heuristic.
+
+    ``ragged_tile`` (DESIGN.md §9) switches on the ragged/masked-tail
+    batch path for variable-extent dispatch (continuous batching): the
+    batch pads only to the given tile multiple — ``block_n`` clamps to
+    that tile-padded extent when it covers it in one grid step — instead
+    of a full ``block_n`` rung; when the extent needs several tiles, the
+    tail grid step hangs past the true batch and the kernel zeroes the
+    overhanging output columns against a traced ``n_real``. Real columns
+    stay bit-identical to the non-ragged path (asserted vs the XLA
+    oracle in ``tests/test_megakernel.py``).
     """
     if w_stack.dtype != PACKED_DTYPE or xp.dtype != PACKED_DTYPE:
         raise TypeError(f"packed operands must be {PACKED_DTYPE}")
@@ -332,7 +346,23 @@ def megakernel_chain(
         w_stack = jnp.pad(w_stack, ((0, 0), (0, 0), (0, pg)))
         kw_max += pg
     kw_act = max(kw_max, m_max // PACK_BITS)
-    pn = -n % block_n
+    masked_tail = ragged_tile is not None
+    if masked_tail:
+        # Ragged path: pad N only to the batch-tile multiple, not the
+        # full block_n rung. When the tile-padded extent fits in one
+        # grid step, clamp block_n down to it (exact single tile, no
+        # masking work wasted); otherwise run full block_n tiles and
+        # let the kernel zero the tail overhang past n_real.
+        tile = max(1, int(ragged_tile))
+        n_tile = -(-n // tile) * tile
+        if n_tile <= block_n:
+            block_n = n_tile
+            n_pad = n_tile
+        else:
+            n_pad = -(-n // block_n) * block_n
+    else:
+        n_pad = -(-n // block_n) * block_n
+    pn = n_pad - n
     pkw = kw_act - kw_in
     if pkw or pn:
         xp = jnp.pad(xp, ((0, pkw), (0, pn)), constant_values=-1)
@@ -351,6 +381,7 @@ def megakernel_chain(
         w_stack, a_stack, b_stack,
         jnp.asarray(k_bits, jnp.int32)[:, None],
         jnp.asarray(n_groups, jnp.int32)[:, None], xp, fin,
+        jnp.full((1, 1), n, jnp.int32) if masked_tail else None,
         block_n=block_n, word_group=word_group,
         final_k_bits=final_k_bits, interpret=interpret,
     )

@@ -1,19 +1,27 @@
-"""BNN serving driver: run the shape-bucketed batched engine against
-synthetic image traffic and report latency/throughput percentiles.
+"""BNN serving driver: run the batched serving engine against synthetic
+image traffic and report latency/throughput percentiles.
+
+``--scheduler`` picks the dispatch discipline (both drive the same
+modes): ``bucket`` — the PR-4 shape-bucket ladder (pad every dispatch
+to a rung); ``continuous`` — the v2 ragged scheduler (DESIGN.md §9:
+coalesce real rows up to ``--max-rows``, pad only to a tile-padded
+extent class, admission control via ``--max-queue-rows``, SLO-aware
+wait via ``--slo-ms``).
 
 Two modes:
 
 * ``--smoke`` (default) — a short fixed burst of ragged requests:
-  warms every bucket, verifies per-request logits against a direct
-  ``bnn_apply_fused`` call, prints the stats snapshot. CI runs this.
+  warms every bucket/extent, verifies per-request logits against a
+  direct exact-shape forward, prints the stats snapshot. CI runs this.
 * ``--sustained`` — an open-loop load run: requests with random image
   counts arrive at ``--rate`` req/s for ``--duration`` seconds (real
   clock); the engine's dispatch loop runs in the gaps. Reports p50/p95/
-  p99 latency, throughput, bucket hit rates and compile counts.
+  p99 latency, throughput, goodput (with ``--slo-ms``), pad-row waste
+  and compile counts.
 
   PYTHONPATH=src python -m repro.launch.serve_bnn --smoke
-  PYTHONPATH=src python -m repro.launch.serve_bnn --sustained \
-      --rate 20 --duration 10 --max-images 8
+  PYTHONPATH=src python -m repro.launch.serve_bnn --scheduler continuous \
+      --sustained --rate 20 --duration 10 --max-images 8 --slo-ms 2500
 """
 
 from __future__ import annotations
@@ -31,7 +39,13 @@ from repro.core.bnn import (
     pack_bnn_params_fused,
     pack_bnn_params_megakernel,
 )
-from repro.serve import DEFAULT_BUCKETS, ServingEngine, load_serving_blocks
+from repro.serve import (
+    DEFAULT_BUCKETS,
+    ContinuousServingEngine,
+    QueueFull,
+    ServingEngine,
+    load_serving_blocks,
+)
 
 
 def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
@@ -60,7 +74,20 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
             print("no tuned serving config in the autotune cache for "
                   f"engine={args.engine} conv_impl={args.conv_impl} "
                   f"buckets={args.buckets}; falling back to 'auto'")
-    return ServingEngine(
+    slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
+    if args.scheduler == "continuous":
+        return ContinuousServingEngine(
+            fused,
+            engine=args.engine,
+            conv_impl=args.conv_impl,
+            blocks=blocks,
+            max_rows=args.max_rows,
+            max_wait_s=args.max_wait_ms / 1e3,
+            max_queue_rows=args.max_queue_rows,
+            slo_s=slo_s,
+            clock=clock,
+        )
+    eng = ServingEngine(
         fused,
         engine=args.engine,
         conv_impl=args.conv_impl,
@@ -69,6 +96,11 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
         max_wait_s=args.max_wait_ms / 1e3,
         clock=clock,
     )
+    # SLO is a measurement concern, not a policy one, for the bucket
+    # ladder — arm the goodput accounting so head-to-head runs compare
+    # like with like.
+    eng.stats.slo_s = slo_s
+    return eng
 
 
 def _random_request(rng, max_images: int) -> np.ndarray:
@@ -87,8 +119,11 @@ def run_smoke(args) -> dict:
     t0 = time.monotonic()
     n_compiled = eng.warmup()
     t_warm = time.monotonic() - t0
-    print(f"warmup: {n_compiled} bucket executors compiled "
-          f"({', '.join(map(str, eng.batcher.buckets))}) in {t_warm:.1f}s")
+    shapes = (eng.extents if args.scheduler == "continuous"
+              else eng.batcher.buckets)
+    kind = "extent" if args.scheduler == "continuous" else "bucket"
+    print(f"warmup: {n_compiled} {kind} executors compiled "
+          f"({', '.join(map(str, shapes))}) in {t_warm:.1f}s")
 
     rng = np.random.default_rng(args.seed)
     requests = _random_requests(rng, args.requests, args.max_images)
@@ -138,11 +173,16 @@ def run_sustained(args) -> dict:
     t_end = time.monotonic() + args.duration
     t_next = time.monotonic()
     submitted = 0
+    rejected = 0
     while time.monotonic() < t_end:
         now = time.monotonic()
         if now >= t_next:
-            eng.submit(_random_request(rng, args.max_images))
-            submitted += 1
+            try:
+                eng.submit(_random_request(rng, args.max_images))
+                submitted += 1
+            except QueueFull:
+                rejected += 1  # admission control shed it (counted in
+                               # the snapshot too)
             t_next += interval
         # pop finished logits as we go: a long load run must not
         # accumulate every completed result in engine memory
@@ -152,14 +192,19 @@ def run_sustained(args) -> dict:
         eng.take(rid)
     snap = eng.snapshot()
     lat, bat = snap["latency_s"], snap["batches"]
-    print(f"sustained: {submitted} requests over {args.duration:.0f}s "
+    print(f"sustained[{snap['scheduler']}]: {submitted} requests "
+          f"({rejected} rejected) over {args.duration:.0f}s "
           f"at {args.rate}/s target")
     print(f"throughput {snap['throughput']['images_per_s']:.1f} img/s | "
           f"latency p50 {lat['p50']*1e3:.0f}ms p95 {lat['p95']*1e3:.0f}ms "
           f"p99 {lat['p99']*1e3:.0f}ms")
-    print(f"buckets {bat['per_bucket']} | padding overhead "
-          f"{bat['padding_overhead']:.1%} | compiles "
+    print(f"dispatch shapes {bat['per_bucket']} | pad-row fraction "
+          f"{bat['pad_row_fraction']:.1%} | compiles "
           f"{snap['executors']['compiles']} (steady state: 0 new)")
+    if snap["slo"]["slo_s"] is not None:
+        print(f"SLO {snap['slo']['slo_s']*1e3:.0f}ms: goodput "
+              f"{snap['slo']['goodput_images_per_s']:.1f} img/s "
+              f"({snap['slo']['images_within_slo']} images within SLO)")
     print(json.dumps(snap, indent=2))
     return snap
 
@@ -176,10 +221,26 @@ def main():
                          "--conv-impl")
     ap.add_argument("--conv-impl", default="im2col",
                     choices=["im2col", "direct"])
+    ap.add_argument("--scheduler", default="bucket",
+                    choices=["bucket", "continuous"],
+                    help="bucket: pad-to-rung ladder (DESIGN.md §7); "
+                         "continuous: ragged coalescing over tile-"
+                         "padded extent classes with admission control "
+                         "and SLO-aware wait (DESIGN.md §9)")
     ap.add_argument("--buckets", type=lambda s: tuple(
         int(b) for b in s.split(",")), default=None,
-        help="comma-separated batch-size ladder (default: 1,4,8 for "
-             "smoke, 1,8,32,128 for sustained)")
+        help="bucket scheduler: comma-separated batch-size ladder "
+             "(default: 1,4,8 for smoke, 1,8,32,128 for sustained)")
+    ap.add_argument("--max-rows", type=int, default=None,
+                    help="continuous scheduler: per-dispatch row budget "
+                         "(default: 8 for smoke, 32 for sustained)")
+    ap.add_argument("--max-queue-rows", type=int, default=None,
+                    help="continuous scheduler: admission-control bound "
+                         "on queued rows (default: unbounded)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency SLO: arms goodput accounting on both "
+                         "schedulers and the continuous scheduler's "
+                         "SLO-aware max-wait")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="micro-batcher head-of-line latency bound")
     ap.add_argument("--blocks", default="auto", choices=["auto", "tuned"],
@@ -205,6 +266,8 @@ def main():
         # Smoke keeps the ladder small so warmup + the per-request
         # exact-shape verification forwards stay CI-cheap.
         args.buckets = DEFAULT_BUCKETS if args.sustained else (1, 4, 8)
+    if args.max_rows is None:
+        args.max_rows = 32 if args.sustained else 8
     if args.sustained:
         run_sustained(args)
     else:

@@ -1,5 +1,6 @@
 """Batched serving for the packed BNN: request queue + micro-batcher,
-shape-bucket ladder, compiled-executor cache, and serving stats.
+shape-bucket ladder, compiled-executor cache, and serving stats — plus
+the v2 continuous-batching scheduler over the ragged megakernel path.
 
     from repro.serve import ServingEngine
     eng = ServingEngine(pack_bnn_params_fused(params), engine="xla")
@@ -9,7 +10,11 @@ shape-bucket ladder, compiled-executor cache, and serving stats.
     logits = eng.take(rid)            # [n, 10], bit-identical to
                                       # bnn_apply_fused on images alone
 
-See DESIGN.md §7 for the batching design and docs/api.md for the
+``ContinuousServingEngine`` has the same surface but replaces
+pad-to-bucket dispatch with ragged coalescing over tile-padded extent
+classes (DESIGN.md §9) plus admission control and an SLO-aware wait.
+
+See DESIGN.md §7/§9 for the batching designs and docs/api.md for the
 stats/snapshot schema.
 """
 
@@ -19,8 +24,20 @@ from repro.serve.buckets import (
     normalize_buckets,
     pad_to_bucket,
 )
+from repro.serve.continuous import (
+    DEFAULT_MAX_ROWS,
+    ContinuousBatcher,
+    ContinuousServingEngine,
+    QueueFull,
+)
 from repro.serve.engine import ServingEngine
-from repro.serve.executor import ExecutorCache, blocks_key
+from repro.serve.executor import (
+    ExecutorCache,
+    RaggedExecutorCache,
+    blocks_key,
+    default_extents,
+    extent_for,
+)
 from repro.serve.queue import Batch, MicroBatcher, Request, Segment
 from repro.serve.stats import ServeStats, percentile
 from repro.serve.tuning import (
@@ -31,12 +48,19 @@ from repro.serve.tuning import (
 
 __all__ = [
     "DEFAULT_BUCKETS",
+    "DEFAULT_MAX_ROWS",
     "bucket_for",
     "normalize_buckets",
     "pad_to_bucket",
     "ServingEngine",
+    "ContinuousServingEngine",
+    "ContinuousBatcher",
+    "QueueFull",
     "ExecutorCache",
+    "RaggedExecutorCache",
     "blocks_key",
+    "default_extents",
+    "extent_for",
     "Batch",
     "MicroBatcher",
     "Request",

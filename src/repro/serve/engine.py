@@ -98,17 +98,48 @@ class ServingEngine:
         """Pop a completed request's logits (None if not finished)."""
         return self.results.pop(rid, None)
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request: drop its queued rows, any partially filled
+        logits, and any unread result. Returns whether anything was
+        dropped. Rows of the request already inside an assembled batch
+        simply compute and are discarded at scatter time (the engine
+        guards on the request still existing) — other requests in that
+        batch are untouched.
+        """
+        req = self.batcher.forget(rid)
+        partial = self._partial.pop(rid, None)
+        self._filled.pop(rid, None)
+        result = self.results.pop(rid, None)
+        return req is not None or partial is not None or result is not None
+
     # -- internals ---------------------------------------------------------
+    def _dispatch(self, batch) -> tuple[np.ndarray, int]:
+        """Assemble + execute one batch; returns ``(logits,
+        dispatched_rows)`` — the rows the accelerator actually ran
+        (bucket size here; tile-padded extent in the continuous
+        subclass), which is what the pad-waste accounting records."""
+        x = batch.assemble(self.batcher.requests)
+        logits = self.executors.run(x)
+        return logits, x.shape[0]
+
     def _run(self, batches) -> list[int]:
         done: list[int] = []
         for batch in batches:
-            x = batch.assemble(self.batcher.requests)
-            self.stats.on_dispatch(batch.bucket, batch.rows, batch.reason)
-            logits = self.executors.run(x)
+            if all(
+                seg.rid not in self.batcher.requests
+                for seg in batch.segments
+            ):
+                continue  # every request cancelled since batching
+            logits, dispatched = self._dispatch(batch)
+            self.stats.on_dispatch(dispatched, batch.rows, batch.reason)
             now = self.clock()
             self.stats.mark_wall(now)
             for seg in batch.segments:
-                req = self.batcher.requests[seg.rid]
+                req = self.batcher.requests.get(seg.rid)
+                if req is None:
+                    # Cancelled between assembly and scatter: its rows
+                    # computed as dead weight; drop them.
+                    continue
                 buf = self._partial.get(seg.rid)
                 if buf is None:
                     buf = np.empty((req.n, logits.shape[-1]), logits.dtype)

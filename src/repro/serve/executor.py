@@ -21,6 +21,15 @@ tilings, no re-measurement in the serving path.
 ladder, cache keys and steady-state compile invariant are identical,
 so a deployment flips engines by constructing the cache with the
 matching packed params and engine string.
+
+:class:`RaggedExecutorCache` is the continuous scheduler's variant
+(DESIGN.md §9): it keys executors on tile-padded EXTENT classes instead
+of bucket rungs — ``extent_for`` rounds a ragged batch up to the next
+power of two below the sublane tile, then to tile multiples — and its
+executors run ``bnn_serve_fn(..., ragged=True)`` so the megakernel FC
+trunk pads only to the tile, never a ``block_n`` rung. The XLA compile
+discipline is unchanged: one executable per extent class, all warmable
+ahead of traffic.
 """
 
 from __future__ import annotations
@@ -31,9 +40,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bnn import bnn_serve_fn
+from repro.kernels.ops import RAGGED_TILE_N
 from repro.serve.stats import ServeStats
 
 IMAGE_SHAPE = (32, 32, 3)  # the CIFAR BNN's fixed per-image shape
+
+
+def extent_for(n: int, *, tile: int = RAGGED_TILE_N) -> int:
+    """The tile-padded extent class a ragged ``n``-row batch dispatches
+    at: the next power of two while below ``tile`` (so light traffic
+    compiles 1/2/4-row executables instead of padding everything to a
+    full tile), then the next ``tile`` multiple. Monotone in ``n`` and
+    ``extent_for(e) == e`` for every class ``e`` — the class set is
+    closed under re-dispatch."""
+    if n < 1:
+        raise ValueError(f"batch needs >= 1 rows, got {n}")
+    if n < tile:
+        e = 1
+        while e < n:
+            e *= 2
+        return min(e, tile)
+    return -(-n // tile) * tile
+
+
+def default_extents(max_rows: int, *, tile: int = RAGGED_TILE_N) -> tuple[int, ...]:
+    """Every extent class ``extent_for`` can produce for batches up to
+    ``max_rows`` — the continuous engine's warmup set (compile count is
+    ``log2(tile) + max_rows/tile``, e.g. 7 classes for tile 8, max 32)."""
+    if max_rows < 1:
+        raise ValueError(f"max_rows must be >= 1, got {max_rows}")
+    cap = extent_for(max_rows, tile=tile)
+    exts: list[int] = []
+    e = 1
+    while e < tile:
+        if e <= cap:
+            exts.append(e)
+        e *= 2
+    exts.extend(range(tile, cap + 1, tile))
+    return tuple(exts)
 
 
 def blocks_key(blocks) -> str:
@@ -69,6 +113,10 @@ class ExecutorCache:
     def key(self, bucket: int) -> tuple:
         return (bucket, self.engine, self.conv_impl, blocks_key(self.blocks))
 
+    def _build(self):
+        return bnn_serve_fn(engine=self.engine, conv_impl=self.conv_impl,
+                            blocks=self.blocks)
+
     def get(self, bucket: int):
         """The compiled callable for ``bucket``; builds (and counts a
         compile) on first use of that bucket."""
@@ -80,8 +128,7 @@ class ExecutorCache:
             return fn
         # One miss == one jit build == one XLA compile for this shape
         # (the bucket fixes the only varying dimension).
-        fn = bnn_serve_fn(engine=self.engine, conv_impl=self.conv_impl,
-                          blocks=self.blocks)
+        fn = self._build()
         self._fns[k] = fn
         self.stats.on_executor("|".join(map(str, k)), hit=False,
                                compiled=True)
@@ -114,4 +161,57 @@ class ExecutorCache:
         return len(self._fns)
 
 
-__all__ = ["ExecutorCache", "blocks_key", "IMAGE_SHAPE"]
+class RaggedExecutorCache(ExecutorCache):
+    """Executor cache keyed on tile-padded extent classes (DESIGN.md §9).
+
+    The continuous scheduler assembles EXACT-row batches; ``run`` rounds
+    each up to its :func:`extent_for` class, zero-pads only that far
+    (per-sample independence makes pad rows bit-neutral, exactly as in
+    the bucket path) and slices the real rows back out. Executors are
+    built with ``bnn_serve_fn(..., ragged=True)`` so the megakernel FC
+    trunk takes the masked-tail batch path — pad-to-tile instead of
+    pad-to-``block_n``-rung — which is a documented no-op for the
+    exact-shape XLA engines. The cache key carries a ``ragged`` marker
+    so a process running both schedulers over one stats recorder never
+    aliases executables across dispatch disciplines.
+    """
+
+    def __init__(self, packed_params: dict, *, tile: int = RAGGED_TILE_N,
+                 **kwargs):
+        super().__init__(packed_params, **kwargs)
+        self.tile = int(tile)
+
+    def key(self, extent: int) -> tuple:
+        return (extent, self.engine, self.conv_impl,
+                blocks_key(self.blocks), "ragged")
+
+    def _build(self):
+        return bnn_serve_fn(engine=self.engine, conv_impl=self.conv_impl,
+                            blocks=self.blocks, ragged=True)
+
+    def extent_of(self, n: int) -> int:
+        return extent_for(n, tile=self.tile)
+
+    def run(self, images: np.ndarray) -> np.ndarray:
+        """Execute an exact-row ragged batch at its extent class.
+
+        Returns host logits ``[n, num_classes]`` for the REAL rows only.
+        """
+        n = images.shape[0]
+        extent = self.extent_of(n)
+        fn = self.get(extent)
+        if extent != n:
+            pad = np.zeros((extent - n,) + images.shape[1:], images.dtype)
+            images = np.concatenate([np.asarray(images), pad], axis=0)
+        out = fn(self.packed, jnp.asarray(images))
+        return np.asarray(out)[:n]
+
+
+__all__ = [
+    "ExecutorCache",
+    "RaggedExecutorCache",
+    "blocks_key",
+    "default_extents",
+    "extent_for",
+    "IMAGE_SHAPE",
+]

@@ -77,10 +77,33 @@ class Batch:
     reason: str  # "full" | "max_wait" | "drain"
 
     def assemble(self, requests: dict[int, Request]) -> np.ndarray:
-        """Concatenate the segment slices and zero-pad to the bucket."""
+        """Concatenate the segment slices and zero-pad to the bucket.
+
+        A segment whose request was cancelled between batching and
+        assembly contributes zero rows in place (zero images are valid
+        inputs, discarded at scatter time) — the other segments'
+        ``batch_row`` offsets stay honest, so one cancellation never
+        corrupts its batchmates' logits.
+        """
+        parts = []
+        proto = None
+        for s in self.segments:
+            req = requests.get(s.rid)
+            if req is None:
+                parts.append(s)  # placeholder, materialized below
+            else:
+                part = req.images[s.offset:s.offset + s.length]
+                proto = part
+                parts.append(part)
+        if proto is None:
+            raise ValueError(
+                "every request in this batch was cancelled; nothing to "
+                "assemble"
+            )
         parts = [
-            requests[s.rid].images[s.offset:s.offset + s.length]
-            for s in self.segments
+            np.zeros((p.length,) + proto.shape[1:], proto.dtype)
+            if isinstance(p, Segment) else p
+            for p in parts
         ]
         return pad_to_bucket(np.concatenate(parts, axis=0), self.bucket)
 
@@ -184,9 +207,29 @@ class MicroBatcher:
         return out
 
     def forget(self, rid: int) -> Optional[Request]:
-        """Drop a completed request's images (the engine calls this once
-        all of a request's rows have produced logits)."""
-        return self.requests.pop(rid, None)
+        """Drop a request's images — on completion (the engine calls
+        this once all of a request's rows have produced logits) or on
+        cancellation.
+
+        A cancelled request may still have a pending cursor: after a
+        split (one slice already dispatched, the rest at the queue
+        head), dropping only the ``requests`` entry would orphan the
+        cursor — the next ``_take`` would build a Segment for a ghost
+        rid and ``assemble`` would take the whole batch (other requests'
+        rows included) down with a KeyError. So the cursor and its
+        remaining-row count are retired here too, keeping the
+        no-drop/no-dup invariant over the rows that still exist
+        (regression-tested in ``tests/test_serve.py``).
+        """
+        req = self.requests.pop(rid, None)
+        if req is None:
+            return None
+        for i, (r, off) in enumerate(self._pending):
+            if r == rid:
+                del self._pending[i]
+                self._pending_rows -= req.n - off
+                break
+        return req
 
 
 __all__ = ["Request", "Segment", "Batch", "MicroBatcher"]

@@ -4,18 +4,34 @@ executor cache and engine, plus the snapshot schema every surface
 
 Snapshot schema (``ServeStats.snapshot()``)::
 
-    {"requests": {"submitted": int, "completed": int,
-                  "images_submitted": int, "images_completed": int},
+    {"scheduler": "bucket" | "continuous",
+     "requests": {"submitted": int, "completed": int,
+                  "images_submitted": int, "images_completed": int,
+                  "rejected": int, "images_rejected": int},
      "batches": {"dispatched": int, "real_rows": int, "padded_rows": int,
+                 "dispatched_rows": int,           # real + padded
                  "padding_overhead": float,        # padded / (real+padded)
-                 "per_bucket": {bucket: count},    # dispatch counts
+                 "pad_row_fraction": float,        # padded / dispatched_rows
+                 "per_bucket": {bucket: count},    # dispatch counts per
+                                                   # bucket rung / extent
                  "bucket_hit_rate": {bucket: fraction of dispatches},
                  "flush_reasons": {"full"|"max_wait"|"drain": count}},
      "executors": {"compiles": int, "hits": int, "misses": int,
                    "keys": [str, ...]},            # cache keys built
      "latency_s": {"count": int, "mean": float,
                    "p50": float, "p95": float, "p99": float, "max": float},
-     "throughput": {"images_per_s": float, "wall_s": float}}
+     "throughput": {"images_per_s": float, "wall_s": float},
+     "slo": {"slo_s": float | None, "images_within_slo": int,
+             "goodput_images_per_s": float}}       # within-SLO imgs / wall
+
+``scheduler`` labels which dispatch policy produced the numbers (the
+bucket ladder or the continuous/ragged scheduler, DESIGN.md §7/§9); the
+``per_bucket`` map then keys on bucket rungs or tile-padded extent
+classes respectively. ``pad_row_fraction`` is the pad-row waste the
+continuous scheduler exists to remove — BENCH_serving.json reports it
+per scheduler side by side. Goodput counts only images whose request
+completed within ``slo_s`` (0.0 goodput and an empty within-SLO count
+when no SLO is configured).
 
 Latency is measured request-submit -> request-complete on the engine's
 (injectable) clock, so the deterministic tests drive it with a fake
@@ -39,12 +55,22 @@ def percentile(xs: list[float], q: float) -> float:
 
 @dataclasses.dataclass
 class ServeStats:
-    """Mutable counters; the engine owns one instance per lifetime."""
+    """Mutable counters; the engine owns one instance per lifetime.
 
+    ``scheduler`` is a label only (snapshot provenance); ``slo_s``, when
+    set, makes ``on_complete`` tally within-SLO images for the goodput
+    figure.
+    """
+
+    scheduler: str = "bucket"
+    slo_s: Optional[float] = None
     submitted_requests: int = 0
     submitted_images: int = 0
     completed_requests: int = 0
     completed_images: int = 0
+    rejected_requests: int = 0
+    rejected_images: int = 0
+    images_within_slo: int = 0
     dispatched_batches: int = 0
     real_rows: int = 0
     padded_rows: int = 0
@@ -74,6 +100,14 @@ class ServeStats:
         self.completed_requests += 1
         self.completed_images += n_images
         self.latencies_s.append(latency_s)
+        if self.slo_s is not None and latency_s <= self.slo_s:
+            self.images_within_slo += n_images
+
+    def on_reject(self, n_images: int) -> None:
+        """An admission-control rejection (continuous scheduler's
+        ``max_queue_rows`` bound): the request never entered the queue."""
+        self.rejected_requests += 1
+        self.rejected_images += n_images
 
     def on_executor(self, key: str, *, hit: bool, compiled: bool) -> None:
         if hit:
@@ -99,17 +133,24 @@ class ServeStats:
         )
         lat = self.latencies_s
         return {
+            "scheduler": self.scheduler,
             "requests": {
                 "submitted": self.submitted_requests,
                 "completed": self.completed_requests,
                 "images_submitted": self.submitted_images,
                 "images_completed": self.completed_images,
+                "rejected": self.rejected_requests,
+                "images_rejected": self.rejected_images,
             },
             "batches": {
                 "dispatched": self.dispatched_batches,
                 "real_rows": self.real_rows,
                 "padded_rows": self.padded_rows,
+                "dispatched_rows": total_rows,
                 "padding_overhead": (
+                    self.padded_rows / total_rows if total_rows else 0.0
+                ),
+                "pad_row_fraction": (
                     self.padded_rows / total_rows if total_rows else 0.0
                 ),
                 "per_bucket": dict(sorted(self.bucket_dispatches.items())),
@@ -138,6 +179,14 @@ class ServeStats:
                     self.completed_images / wall if wall > 0 else 0.0
                 ),
                 "wall_s": wall,
+            },
+            "slo": {
+                "slo_s": self.slo_s,
+                "images_within_slo": self.images_within_slo,
+                "goodput_images_per_s": (
+                    self.images_within_slo / wall
+                    if wall > 0 and self.slo_s is not None else 0.0
+                ),
             },
         }
 

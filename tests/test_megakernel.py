@@ -144,6 +144,81 @@ def test_stacked_padding_conventions():
 
 
 # ---------------------------------------------------------------------------
+# Ragged / masked-tail batch path (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 3, 8, 13])
+def test_chain_ragged_tile_matches_oracle(n):
+    """ragged_tile dispatch (tile-padded extent, block_n clamped to a
+    single exact tile) is bit-identical to the exact-N oracle at every
+    batch size around the tile seams, head included."""
+    layers, stack, k_bits, _, dims = _chain_fixture(n=n)
+    xp = _rand_packed_acts(jax.random.fold_in(KEY, 200 + n), dims[0], n)
+    final_k = dims[-1]
+    fin = _rand_fused_layer(jax.random.fold_in(KEY, 77), 10, final_k)
+    want = bitops.megakernel_chain_xla(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+        final_wp=fin["w_packed"], final_k_bits=final_k,
+    )
+    got = kops.megakernel_chain(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+        final_wp=fin["w_packed"], final_k_bits=final_k,
+        ragged_tile=kops.RAGGED_TILE_N,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_chain_masked_tail_grid_matches_ragged_oracle():
+    """Multi-tile masked tail: force block_n below the tile-padded
+    extent so the tail grid step hangs past n_real, and assert the RAW
+    launch (pad columns included) against megakernel_chain_ragged_xla —
+    real columns exact, overhang columns zeroed in-kernel."""
+    from repro.kernels import megakernel as mega_kernel
+    from repro.kernels.popcount import PACK_BITS
+
+    layers, stack, k_bits, _, dims = _chain_fixture()
+    n, tile, block_n = 37, 8, 16      # n_tile 40 > block_n: tail masks
+    xp = _rand_packed_acts(jax.random.fold_in(KEY, 300), dims[0], n)
+    n_pad = -(-n // block_n) * block_n
+    l, m_max, kw_max = stack["w"].shape
+    word_group = 1
+    kw_act = max(kw_max, m_max // PACK_BITS)
+    xp_pad = jnp.pad(xp, ((0, kw_act - xp.shape[0]), (0, n_pad - n)),
+                     constant_values=-1)
+    kw_true = [-(-k // PACK_BITS) for k in k_bits]
+    got = mega_kernel.megakernel_chain(
+        stack["w"], stack["a"], stack["b"],
+        jnp.asarray(k_bits, jnp.int32)[:, None],
+        jnp.asarray(kw_true, jnp.int32)[:, None],
+        xp_pad, None, jnp.full((1, 1), n, jnp.int32),
+        block_n=block_n, word_group=word_group,
+        interpret=True,
+    )
+    want = bitops.megakernel_chain_ragged_xla(
+        stack["w"], stack["a"], stack["b"], k_bits, xp_pad[:, :n_pad],
+        dims[-1], n,
+    )
+    rows = -(-dims[-1] // PACK_BITS)
+    np.testing.assert_array_equal(np.asarray(got[:rows]),
+                                  np.asarray(want[:rows]))
+    # the overhang columns really are pinned to zero
+    assert not np.asarray(got[:rows, n:]).any()
+
+
+def test_ragged_oracle_zeroes_pad_columns():
+    layers, stack, k_bits, xp, dims = _chain_fixture(n=8)
+    out = bitops.megakernel_chain_ragged_xla(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1], 5,
+    )
+    exact = bitops.megakernel_chain_xla(
+        stack["w"], stack["a"], stack["b"], k_bits, xp, dims[-1],
+    )
+    np.testing.assert_array_equal(np.asarray(out[:, :5]),
+                                  np.asarray(exact[:, :5]))
+    assert not np.asarray(out[:, 5:]).any()
+
+
+# ---------------------------------------------------------------------------
 # Conv-stage kernel
 # ---------------------------------------------------------------------------
 

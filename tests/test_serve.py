@@ -15,9 +15,14 @@ from repro.core.bnn import (
     pack_bnn_params_fused,
 )
 from repro.serve import (
+    ContinuousBatcher,
+    ContinuousServingEngine,
     MicroBatcher,
+    QueueFull,
     ServingEngine,
     bucket_for,
+    default_extents,
+    extent_for,
     normalize_buckets,
     pad_to_bucket,
 )
@@ -415,3 +420,252 @@ def test_engine_serves_megakernel_requests_bit_identical(mega_params,
         np.testing.assert_array_equal(got, want)
     snap = eng.snapshot()
     assert snap["executors"]["compiles"] == warmed == 2
+
+
+# ---------------------------------------------------------------------------
+# Cancellation (ISSUE 6 satellite): forget() retires pending cursors
+# ---------------------------------------------------------------------------
+
+def test_forget_split_request_retires_pending_cursor():
+    """Regression: cancelling a request whose tail is still queued must
+    retire its (rid, offset) cursor too — the pre-fix code left an
+    orphan cursor whose ghost segment poisoned the next batch."""
+    clk = FakeClock()
+    mb = MicroBatcher((2,), max_wait_s=10.0, clock=clk)
+    r0 = mb.submit(np.zeros((3, 1, 1, 1), np.float32))
+    (head,) = mb.poll()                  # full 2-row slice of r0 leaves
+    assert [s.rid for s in head.segments] == [r0]
+    assert mb.pending_rows == 1          # r0's tail at the queue head
+    assert mb.forget(r0) is not None
+    assert mb.pending_rows == 0          # cursor retired with the request
+    r1 = mb.submit(np.ones((2, 1, 1, 1), np.float32))
+    (nxt,) = mb.poll()
+    assert [s.rid for s in nxt.segments] == [r1]   # no ghost segment
+    np.testing.assert_array_equal(
+        nxt.assemble(mb.requests), np.ones((2, 1, 1, 1), np.float32)
+    )
+
+
+def test_batch_assemble_zeroes_cancelled_batchmate_rows():
+    """A request cancelled between batching and assembly contributes
+    zero rows in place: batchmates' batch_row offsets stay honest."""
+    clk = FakeClock()
+    mb = MicroBatcher((4,), max_wait_s=0.0, clock=clk)
+    a = np.ones((2, 2, 2, 1), np.float32)
+    b = 2 * np.ones((1, 2, 2, 1), np.float32)
+    ra = mb.submit(a)
+    rb = mb.submit(b)
+    (batch,) = mb.drain()
+    mb.forget(ra)
+    x = batch.assemble(mb.requests)
+    assert not x[:2].any()               # ghost rows zeroed in place
+    np.testing.assert_array_equal(x[2:3], b)
+    mb.forget(rb)
+    with pytest.raises(ValueError, match="cancelled"):
+        batch.assemble(mb.requests)      # nothing left to assemble
+
+
+def test_engine_cancel_after_split_keeps_batchmates_intact(fused_params,
+                                                           images):
+    """Cancel a split request between the full flush and the tail flush:
+    the tail's cursor disappears and later requests serve normally."""
+    clk = FakeClock()
+    eng = ServingEngine(fused_params, engine="xla", buckets=(1, 4),
+                        max_wait_s=10.0, clock=clk)
+    eng.warmup()
+    imgs = np.asarray(images)
+    big = eng.submit(imgs[:6])           # splits: 4 dispatched, 2 queued
+    eng.step()
+    assert eng.cancel(big)
+    small = eng.submit(imgs[6:8])
+    done = eng.drain()
+    assert small in done and big not in done
+    want = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(imgs[6:8])))
+    np.testing.assert_array_equal(eng.take(small), want)
+    assert eng.take(big) is None
+
+
+def test_engine_cancel_between_poll_and_run_drops_only_that_request(
+        fused_params, images):
+    """Rows of a cancelled request already inside an assembled batch
+    compute as zero ghosts and are dropped at scatter; batchmates'
+    logits stay bit-identical to their exact-shape forward."""
+    clk = FakeClock()
+    eng = ServingEngine(fused_params, engine="xla", buckets=(4,),
+                        max_wait_s=0.0, clock=clk)
+    eng.warmup()
+    imgs = np.asarray(images)
+    ra = eng.submit(imgs[:2])
+    rb = eng.submit(imgs[2:3])
+    batches = eng.batcher.poll()         # batched but not yet run
+    assert eng.cancel(ra)
+    done = eng._run(batches)
+    assert done == [rb]
+    want = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(imgs[2:3])))
+    np.testing.assert_array_equal(eng.take(rb), want)
+    assert eng.take(ra) is None
+
+
+def test_engine_skips_batch_when_every_request_cancelled(fused_params):
+    clk = FakeClock()
+    eng = ServingEngine(fused_params, engine="xla", buckets=(4,),
+                        max_wait_s=0.0, clock=clk)
+    eng.warmup()
+    rid = eng.submit(np.zeros((2, 32, 32, 3), np.float32))
+    batches = eng.batcher.poll()
+    assert eng.cancel(rid)
+    assert eng._run(batches) == []       # skipped entirely, no dispatch
+    assert eng.snapshot()["batches"]["dispatched"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Continuous scheduler (ISSUE 6): ragged coalescing over extent classes
+# ---------------------------------------------------------------------------
+
+def test_extent_class_helpers():
+    assert [extent_for(n) for n in (1, 2, 3, 5, 8, 9, 16, 17, 25, 32)] == \
+        [1, 2, 4, 8, 8, 16, 16, 24, 32, 32]
+    assert default_extents(32) == (1, 2, 4, 8, 16, 24, 32)
+    assert default_extents(8) == (1, 2, 4, 8)
+    assert default_extents(1) == (1,)
+    for e in default_extents(32):
+        assert extent_for(e) == e        # classes closed under re-dispatch
+    with pytest.raises(ValueError):
+        extent_for(0)
+    with pytest.raises(ValueError):
+        default_extents(0)
+
+
+def test_continuous_batcher_full_and_ragged_flush():
+    clk = FakeClock()
+    cb = ContinuousBatcher(max_rows=8, max_wait_s=0.5, clock=clk)
+    cb.submit(np.zeros((5, 1, 1, 1), np.float32))
+    assert cb.poll() == []               # young, below budget: coalesce
+    cb.submit(np.zeros((6, 1, 1, 1), np.float32))
+    (full,) = cb.poll()                  # 11 pending rows >= budget 8
+    assert full.reason == "full" and full.rows == full.bucket == 8
+    assert cb.pending_rows == 3
+    clk.advance(1.0)
+    (ragged,) = cb.poll()                # aged out: EXACT rows, no rung
+    assert ragged.reason == "max_wait"
+    assert ragged.rows == ragged.bucket == 3
+
+
+def test_continuous_admission_control():
+    clk = FakeClock()
+    cb = ContinuousBatcher(max_rows=4, max_queue_rows=6, clock=clk)
+    cb.submit(np.zeros((4, 1, 1, 1), np.float32))
+    cb.submit(np.zeros((2, 1, 1, 1), np.float32))
+    with pytest.raises(QueueFull):
+        cb.submit(np.zeros((1, 1, 1, 1), np.float32))
+    cb.poll()                            # a dispatch frees queue budget
+    cb.submit(np.zeros((1, 1, 1, 1), np.float32))
+    with pytest.raises(ValueError, match="max_queue_rows"):
+        ContinuousBatcher(max_rows=8, max_queue_rows=4)
+
+
+def test_continuous_service_ewma():
+    cb = ContinuousBatcher(max_rows=8, clock=FakeClock())
+    assert cb.est_service_s(8) == 0.0    # optimistic before any data
+    cb.note_service(8, 0.8)              # 0.1 s/row
+    cb.note_service(8, 1.6)              # 0.2 s/row folds in at 0.3
+    assert cb.est_service_s(1) == pytest.approx(0.7 * 0.1 + 0.3 * 0.2)
+    cb.note_service(0, 1.0)              # degenerate observations ignored
+    cb.note_service(8, 0.0)
+    assert cb.est_service_s(1) == pytest.approx(0.13)
+
+
+def test_continuous_slo_aware_wait_shrinks_with_load():
+    clk = FakeClock()
+    cb = ContinuousBatcher(max_rows=32, max_wait_s=1.0, slo_s=2.0,
+                           slo_headroom=0.5, clock=clk)
+    assert cb.current_wait() == 1.0      # no service data: static bound
+    cb.note_service(8, 0.8)              # 0.1 s/row observed
+    cb.submit(np.zeros((4, 1, 1, 1), np.float32))
+    # budget 2.0*0.5 minus est service of 4 pending rows = 0.6s
+    assert cb.current_wait() == pytest.approx(0.6)
+    cb.submit(np.zeros((8, 1, 1, 1), np.float32))
+    # 12 pending rows: est service 1.2s exceeds the budget -> no wait
+    assert cb.current_wait() == 0.0
+    (b,) = cb.poll()
+    assert b.reason == "max_wait" and b.rows == 12
+
+
+@pytest.mark.parametrize("engine", ["xla", "xnor"])
+@pytest.mark.parametrize("conv_impl", ["im2col", "direct"])
+def test_continuous_engine_bit_identical(fused_params, images, engine,
+                                         conv_impl):
+    """The v2 engine's contract (DESIGN.md §9): every request's logits
+    are bit-identical to its exact-shape forward, for every engine x
+    conv_impl pair — extent padding is as neutral as rung padding."""
+    clk = FakeClock()
+    if engine == "xnor":                 # interpret Pallas is python-speed
+        max_rows, slices = 2, (slice(0, 1), slice(1, 3))
+    else:
+        max_rows, slices = 4, (slice(0, 3), slice(3, 4), slice(4, 8))
+    eng = ContinuousServingEngine(fused_params, engine=engine,
+                                  conv_impl=conv_impl, max_rows=max_rows,
+                                  max_wait_s=0.0, clock=clk)
+    imgs = np.asarray(images)
+    requests = {}
+    for sl in slices:
+        requests[eng.submit(imgs[sl])] = imgs[sl]
+        eng.step()
+    eng.drain()
+    for rid, x in requests.items():
+        got = eng.take(rid)
+        want = np.asarray(
+            bnn_apply_fused(fused_params, jnp.asarray(x), engine=engine,
+                            conv_impl=conv_impl)
+        )
+        assert got is not None
+        np.testing.assert_array_equal(got, want)
+
+
+def test_continuous_engine_extent_accounting(fused_params):
+    clk = FakeClock()
+    eng = ContinuousServingEngine(fused_params, engine="xla", max_rows=8,
+                                  max_wait_s=0.0, slo_s=10.0, clock=clk)
+    assert eng.extents == (1, 2, 4, 8)
+    assert eng.warmup() == 4
+    rid = eng.submit(np.zeros((7, 32, 32, 3), np.float32))
+    eng.step()                           # 7 real rows -> extent 8
+    assert eng.take(rid) is not None
+    snap = eng.snapshot()
+    assert snap["scheduler"] == "continuous"
+    assert snap["batches"]["real_rows"] == 7
+    assert snap["batches"]["dispatched_rows"] == 8   # 1 tile-pad row
+    assert snap["batches"]["pad_row_fraction"] == pytest.approx(1 / 8)
+    assert snap["batches"]["per_bucket"] == {8: 1}   # keyed on extent
+    assert snap["executors"]["compiles"] == 4        # none past warmup
+    assert snap["slo"]["slo_s"] == 10.0
+    assert snap["slo"]["images_within_slo"] == 7
+
+
+def test_continuous_engine_counts_rejections(fused_params):
+    eng = ContinuousServingEngine(fused_params, engine="xla", max_rows=4,
+                                  max_queue_rows=4, max_wait_s=10.0,
+                                  clock=FakeClock())
+    eng.submit(np.zeros((3, 32, 32, 3), np.float32))
+    with pytest.raises(QueueFull):
+        eng.submit(np.zeros((2, 32, 32, 3), np.float32))
+    snap = eng.snapshot()
+    assert snap["requests"]["rejected"] == 1
+    assert snap["requests"]["images_rejected"] == 2
+    assert snap["requests"]["submitted"] == 1        # never entered queue
+
+
+def test_continuous_engine_cancel_split_request(fused_params, images):
+    clk = FakeClock()
+    eng = ContinuousServingEngine(fused_params, engine="xla", max_rows=4,
+                                  max_wait_s=10.0, clock=clk)
+    imgs = np.asarray(images)
+    big = eng.submit(imgs[:6])           # 6 > budget 4: splits
+    eng.step()                           # full 4-row dispatch; 2 queued
+    assert eng.cancel(big)
+    small = eng.submit(imgs[6:8])
+    done = eng.drain()
+    assert done == [small]
+    want = np.asarray(bnn_apply_fused(fused_params, jnp.asarray(imgs[6:8])))
+    np.testing.assert_array_equal(eng.take(small), want)
+    assert eng.take(big) is None
