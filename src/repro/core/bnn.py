@@ -400,6 +400,7 @@ def bnn_serve_fn(
     conv_impl: str = "im2col",
     blocks: object = "auto",
     ragged: bool = False,
+    mesh: object = None,
 ):
     """The serving entry point: a jit-compiled ``(packed, images) ->
     logits`` callable over :func:`bnn_apply_fused` — or, for the
@@ -427,6 +428,19 @@ def bnn_serve_fn(
     tile-padded extents pad to the sublane tile, not a ``block_n`` rung
     (DESIGN.md §9); it is a no-op for the exact-shape XLA engines and
     the per-layer fused chain.
+
+    ``mesh`` (DESIGN.md §10) is a 1-D ``("data",)`` serving mesh from
+    ``launch.mesh.make_serving_mesh``: the forward is wrapped in
+    ``shard_map`` with the packed params REPLICATED (the whole packed
+    model is ~1.75 MB, so every device holds it and the forward needs
+    no collectives) and the batch dim sharded over ``data`` — each
+    device runs the identical per-shard program the single-device path
+    runs, which is why sharded logits are bit-identical to unsharded
+    ones (asserted per engine x conv_impl x device-count in
+    ``tests/test_sharded_serve.py``). The caller must dispatch batches
+    whose leading dim divides the mesh (the serving executors round
+    their ladders to ``tile x n_devices`` and zero-pad bit-neutrally —
+    never this function's concern).
     """
     if engine not in SERVE_ENGINES:
         raise ValueError(f"unknown serving engine {engine!r}; "
@@ -436,22 +450,35 @@ def bnn_serve_fn(
     if engine in ("megakernel", "megakernel_xla"):
         inner = "xnor" if engine == "megakernel" else "xla"
 
-        @functools.partial(jax.jit, donate_argnums=donate)
-        def serve_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
+        def apply_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
             return bnn_apply_megakernel(
                 packed, images, engine=inner, blocks=blocks, ragged=ragged,
             )
+    else:
 
-        return serve_fn
+        def apply_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
+            return bnn_apply_fused(
+                packed, images, engine=engine, conv_impl=conv_impl,
+                blocks=blocks,
+            )
 
-    @functools.partial(jax.jit, donate_argnums=donate)
-    def serve_fn(packed: dict, images: jnp.ndarray) -> jnp.ndarray:
-        return bnn_apply_fused(
-            packed, images, engine=engine, conv_impl=conv_impl,
-            blocks=blocks,
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+
+        from repro.distributed.sharding import serve_specs
+
+        p_spec, x_spec, y_spec = serve_specs(mesh)
+        # check_rep=False: the Pallas kernel calls inside the per-shard
+        # program carry no replication rules; correctness rests on the
+        # per-sample independence of the forward, asserted bit-exactly
+        # in the sharded test matrix.
+        apply_fn = shard_map(
+            apply_fn, mesh=mesh,
+            in_specs=(p_spec, x_spec), out_specs=y_spec,
+            check_rep=False,
         )
 
-    return serve_fn
+    return functools.partial(jax.jit, donate_argnums=donate)(apply_fn)
 
 
 def bnn_loss(params, images, labels, cfg: BNNConfig):

@@ -214,6 +214,39 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+# --------------------------- BNN serving (DESIGN.md §10) ----------------------
+#
+# The packed-BNN serving path is pure data parallelism over a 1-D
+# ``("data",)`` mesh (``launch.mesh.make_serving_mesh``): packed weights
+# replicated (they are ~1.75 MB — the paper's 32x footprint win spent on
+# a collective-free forward), batch sharded. These helpers are what
+# ``core.bnn.bnn_serve_fn(mesh=...)`` builds its shard_map specs from.
+
+
+def mesh_devices(mesh: Optional[Mesh]) -> int:
+    """Device count of a serving mesh (1 for ``None`` — the
+    single-device dispatch path)."""
+    return 1 if mesh is None else int(np.prod(list(mesh.shape.values())))
+
+
+def serve_specs(mesh: Mesh) -> tuple[P, P, P]:
+    """``(params_spec, images_spec, logits_spec)`` for the serving
+    forward: weights replicated, batch dim sharded over ``data``.
+
+    Reuses the rule-table guard discipline: a mesh without a ``data``
+    axis degrades to fully replicated specs (single-device dispatch)
+    instead of erroring — the same ``_guard`` posture that lets one
+    rule set serve every mesh shape. Batch divisibility is NOT guarded
+    here (shard_map specs are shape-free); the serving executors are
+    responsible for dispatching only device-divisible batches
+    (``serve.executor.extent_for(..., devices=)`` /
+    ``serve.buckets.mesh_buckets``), padding bit-neutral zero rows when
+    a batch does not divide.
+    """
+    axis = "data" if "data" in mesh.shape else None
+    return P(), P(axis), P(axis)
+
+
 # ------------------------- activation constraints -----------------------------
 #
 # Models are mesh-agnostic; the launcher installs the active mesh here and

@@ -1,4 +1,5 @@
-"""Production mesh construction (DESIGN.md §5).
+"""Mesh construction: the transformer dry-run's production meshes
+(DESIGN.md §5) and the packed-BNN serving mesh (DESIGN.md §10).
 
 A FUNCTION, not a module-level constant — importing this module never
 touches jax device state (device count is locked at first jax init, and
@@ -17,6 +18,35 @@ import numpy as np
 # sharding-rule table serves both; single-pod just has pod=1.
 SINGLE_POD = (1, 16, 16)              # 256 chips
 MULTI_POD = (2, 16, 16)               # 512 chips
+
+
+def make_serving_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """1-D data-parallel mesh for the packed-BNN serving stack.
+
+    Unlike :func:`make_production_mesh` there is no 256-chip assumption:
+    the serving mesh is ``("data",)`` over the first ``n_devices``
+    devices (default: all of them), because the packed model is tiny
+    (~1.75 MB — XNOR-Net's 32x memory saving) and is REPLICATED on every
+    device; only the batch shards. The forward is then collective-free:
+    each device runs the whole network on its batch slice (DESIGN.md
+    §10).
+
+    Simulated scale-out uses forced host devices exactly like the
+    dry-run path: set ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=N`` BEFORE the first jax backend touch (``tests/conftest.py``
+    and ``benchmarks/scaling.py`` both do).
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"serving mesh needs >= 1 device, got {n}")
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the serving mesh, have {len(devices)}"
+            " — simulated scale-out must set XLA_FLAGS=--xla_force_"
+            f"host_platform_device_count={n} before any jax device use"
+        )
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

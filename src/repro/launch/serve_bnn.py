@@ -19,7 +19,16 @@ Two modes:
   p99 latency, throughput, goodput (with ``--slo-ms``), pad-row waste
   and compile counts.
 
+``--devices N`` (DESIGN.md §10) scales either scheduler out
+data-parallel over a 1-D serving mesh: packed weights replicated on
+every device, each dispatch's batch sharded over ``data``. Off-TPU the
+devices are simulated — the flag forces
+``--xla_force_host_platform_device_count=N`` into ``XLA_FLAGS`` before
+the first jax backend touch (so it must not be combined with code that
+already initialized jax in-process).
+
   PYTHONPATH=src python -m repro.launch.serve_bnn --smoke
+  PYTHONPATH=src python -m repro.launch.serve_bnn --smoke --devices 8
   PYTHONPATH=src python -m repro.launch.serve_bnn --scheduler continuous \
       --sustained --rate 20 --duration 10 --max-images 8 --slo-ms 2500
 """
@@ -28,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -48,7 +58,28 @@ from repro.serve import (
 )
 
 
+def _force_host_devices(n: int) -> None:
+    """Simulated scale-out: force ``n`` host platform devices. Must run
+    before the first jax backend touch; a pre-set count in XLA_FLAGS
+    (e.g. the CI leg's environment) wins."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    )
+
+
 def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.devices)
+        print(f"serving mesh: {args.devices} devices, 1-D data axis "
+              f"(weights replicated, batch sharded)")
     params = init_bnn_params(jax.random.PRNGKey(args.seed))
     if args.engine.startswith("megakernel"):
         # one-launch-per-stage executors (DESIGN.md §8) take the
@@ -85,6 +116,7 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
             max_wait_s=args.max_wait_ms / 1e3,
             max_queue_rows=args.max_queue_rows,
             slo_s=slo_s,
+            mesh=mesh,
             clock=clock,
         )
     eng = ServingEngine(
@@ -94,6 +126,7 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
         blocks=blocks,
         buckets=args.buckets,
         max_wait_s=args.max_wait_ms / 1e3,
+        mesh=mesh,
         clock=clock,
     )
     # SLO is a measurement concern, not a policy one, for the bucket
@@ -260,8 +293,14 @@ def main():
                     help="sustained: seconds of traffic")
     ap.add_argument("--max-images", type=int, default=8,
                     help="images per request ~ U{1..max}")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="mesh-sharded serving (DESIGN.md §10): shard "
+                         "every dispatch data-parallel over N devices "
+                         "(weights replicated). Off-TPU forces N "
+                         "simulated host devices via XLA_FLAGS")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    _force_host_devices(args.devices)
     if args.buckets is None:
         # Smoke keeps the ladder small so warmup + the per-request
         # exact-shape verification forwards stay CI-cheap.

@@ -86,7 +86,11 @@ def train(
         o_sh = shard_rules.params_shardings(mesh, opt_state)
         params = jax.device_put(params, p_sh)
         opt_state = jax.device_put(opt_state, o_sh)
+        # Pin outputs to the input shardings: params/opt feed back into
+        # the next step (donated), and an unconstrained compiler choice
+        # for an output leaf would mismatch in_shardings on step 2.
         jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                         out_shardings=(p_sh, o_sh, None),
                          donate_argnums=(0, 1))
         ctx = shard_rules.activation_mesh(mesh)
     else:

@@ -21,6 +21,7 @@ stats/snapshot schema.
 from repro.serve.buckets import (
     DEFAULT_BUCKETS,
     bucket_for,
+    mesh_buckets,
     normalize_buckets,
     pad_to_bucket,
 )
@@ -50,6 +51,7 @@ __all__ = [
     "DEFAULT_BUCKETS",
     "DEFAULT_MAX_ROWS",
     "bucket_for",
+    "mesh_buckets",
     "normalize_buckets",
     "pad_to_bucket",
     "ServingEngine",

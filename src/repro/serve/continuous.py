@@ -192,6 +192,15 @@ class ContinuousServingEngine(ServingEngine):
     on overflow), ``slo_s`` both arms the SLO-aware wait and makes the
     snapshot's goodput figure meaningful. ``warmup`` compiles every
     extent class ``default_extents(max_rows)`` instead of a ladder.
+
+    ``mesh`` (DESIGN.md §10) shards every dispatch data-parallel over a
+    1-D serving mesh: the extent ladder becomes mesh-multiple classes
+    (``extent_for(..., devices=n)`` — closed under re-dispatch exactly
+    like the single-device ladder) and the ragged executor pads a
+    coalesced batch bit-neutrally up to its mesh-divisible extent, so a
+    3-real-row batch on 8 devices dispatches at extent 8 and hands back
+    exactly 3 rows. Per-request logits remain bit-identical to
+    exact-shape single-device execution.
     """
 
     def __init__(
@@ -206,6 +215,7 @@ class ContinuousServingEngine(ServingEngine):
         max_queue_rows: Optional[int] = None,
         slo_s: Optional[float] = None,
         slo_headroom: float = 0.5,
+        mesh: object = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         # Deliberately NOT calling super().__init__: the base wires a
@@ -223,9 +233,12 @@ class ContinuousServingEngine(ServingEngine):
         )
         self.executors = RaggedExecutorCache(
             packed_params, engine=engine, conv_impl=conv_impl,
-            blocks=blocks, stats=self.stats,
+            blocks=blocks, mesh=mesh, stats=self.stats,
         )
-        self.extents = default_extents(max_rows, tile=self.executors.tile)
+        self.extents = default_extents(
+            max_rows, tile=self.executors.tile,
+            devices=self.executors.devices,
+        )
         self._partial = {}
         self._filled = {}
         self.results = {}

@@ -17,7 +17,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.buckets import DEFAULT_BUCKETS
+from repro.serve.buckets import DEFAULT_BUCKETS, mesh_buckets
 from repro.serve.executor import IMAGE_SHAPE, ExecutorCache
 from repro.serve.queue import MicroBatcher
 from repro.serve.stats import ServeStats
@@ -33,6 +33,12 @@ class ServingEngine:
     the kernel path exactly as in ``bnn_serve_fn``; ``buckets``/
     ``max_wait_s`` shape the batching policy; ``clock`` is injectable
     for deterministic tests.
+
+    ``mesh`` (DESIGN.md §10) scales the same engine out data-parallel:
+    executors dispatch through ``bnn_serve_fn(mesh=...)`` (weights
+    replicated, batch sharded) and the bucket ladder is normalized to
+    device multiples (``mesh_buckets``) so every dispatch divides the
+    mesh. Logits stay bit-identical to single-device dispatch.
     """
 
     def __init__(
@@ -44,15 +50,20 @@ class ServingEngine:
         blocks: object = "auto",
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         max_wait_s: float = 0.002,
+        mesh: object = None,
         clock: Callable[[], float] = time.monotonic,
     ):
+        from repro.distributed.sharding import mesh_devices
+
         self.stats = ServeStats()
         self.clock = clock
-        self.batcher = MicroBatcher(buckets, max_wait_s=max_wait_s,
-                                    clock=clock)
+        self.batcher = MicroBatcher(
+            mesh_buckets(buckets, mesh_devices(mesh)),
+            max_wait_s=max_wait_s, clock=clock,
+        )
         self.executors = ExecutorCache(
             packed_params, engine=engine, conv_impl=conv_impl,
-            blocks=blocks, stats=self.stats,
+            blocks=blocks, mesh=mesh, stats=self.stats,
         )
         # rid -> [n, 10] float logits being filled segment by segment
         self._partial: dict[int, np.ndarray] = {}

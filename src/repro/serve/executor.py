@@ -30,6 +30,17 @@ executors run ``bnn_serve_fn(..., ragged=True)`` so the megakernel FC
 trunk pads only to the tile, never a ``block_n`` rung. The XLA compile
 discipline is unchanged: one executable per extent class, all warmable
 ahead of traffic.
+
+Both caches accept a ``mesh=`` (a 1-D serving mesh from
+``launch.mesh.make_serving_mesh``, DESIGN.md §10): executors are then
+built with ``bnn_serve_fn(mesh=...)`` — weights replicated, batch
+sharded over ``data`` — the cache key gains a device-count component
+(``meshN``) so sharded executables never alias single-device ones, the
+extent ladder scales to ``devices * extent_for(ceil(n/devices))`` so
+every dispatched shape divides the mesh, and any out-of-ladder batch is
+padded with bit-neutral zero rows to the next device multiple (sliced
+back to exact rows) instead of crashing. The steady-state compile
+invariant is unchanged: one executable per (shape class x mesh) key.
 """
 
 from __future__ import annotations
@@ -46,15 +57,26 @@ from repro.serve.stats import ServeStats
 IMAGE_SHAPE = (32, 32, 3)  # the CIFAR BNN's fixed per-image shape
 
 
-def extent_for(n: int, *, tile: int = RAGGED_TILE_N) -> int:
+def extent_for(n: int, *, tile: int = RAGGED_TILE_N, devices: int = 1) -> int:
     """The tile-padded extent class a ragged ``n``-row batch dispatches
     at: the next power of two while below ``tile`` (so light traffic
     compiles 1/2/4-row executables instead of padding everything to a
     full tile), then the next ``tile`` multiple. Monotone in ``n`` and
     ``extent_for(e) == e`` for every class ``e`` — the class set is
-    closed under re-dispatch."""
+    closed under re-dispatch.
+
+    ``devices > 1`` (mesh-sharded dispatch, DESIGN.md §10) applies the
+    SAME ladder to the per-device shard and scales back up: the class is
+    ``devices * extent_for(ceil(n / devices))``, so every class divides
+    the mesh and each device sees a shard extent that is itself a valid
+    single-device class (1/2/4 then tile multiples — full-tile classes
+    land on ``tile x devices`` multiples globally). Monotonicity and
+    closure under re-dispatch carry over because ``extent_for`` is
+    idempotent on its own classes."""
     if n < 1:
         raise ValueError(f"batch needs >= 1 rows, got {n}")
+    if devices > 1:
+        return devices * extent_for(-(-n // devices), tile=tile)
     if n < tile:
         e = 1
         while e < n:
@@ -63,12 +85,21 @@ def extent_for(n: int, *, tile: int = RAGGED_TILE_N) -> int:
     return -(-n // tile) * tile
 
 
-def default_extents(max_rows: int, *, tile: int = RAGGED_TILE_N) -> tuple[int, ...]:
+def default_extents(max_rows: int, *, tile: int = RAGGED_TILE_N,
+                    devices: int = 1) -> tuple[int, ...]:
     """Every extent class ``extent_for`` can produce for batches up to
     ``max_rows`` — the continuous engine's warmup set (compile count is
-    ``log2(tile) + max_rows/tile``, e.g. 7 classes for tile 8, max 32)."""
+    ``log2(tile) + max_rows/tile``, e.g. 7 classes for tile 8, max 32).
+    With ``devices > 1`` the set is the per-device-shard class set
+    scaled by the device count (same cardinality bound, taken over
+    ``ceil(max_rows / devices)`` shard rows)."""
     if max_rows < 1:
         raise ValueError(f"max_rows must be >= 1, got {max_rows}")
+    if devices > 1:
+        return tuple(
+            devices * e
+            for e in default_extents(-(-max_rows // devices), tile=tile)
+        )
     cap = extent_for(max_rows, tile=tile)
     exts: list[int] = []
     e = 1
@@ -101,21 +132,34 @@ class ExecutorCache:
         engine: str = "xla",
         conv_impl: str = "im2col",
         blocks: object = "auto",
+        mesh: object = None,
         stats: Optional[ServeStats] = None,
     ):
+        from repro.distributed.sharding import mesh_devices
+
         self.packed = packed_params
         self.engine = engine
         self.conv_impl = conv_impl
         self.blocks = blocks
+        self.mesh = mesh
+        self.devices = mesh_devices(mesh)
         self.stats = stats if stats is not None else ServeStats()
         self._fns: dict[tuple, object] = {}
 
+    def _mesh_key(self) -> tuple:
+        """Device-count key component — present only for meshed caches,
+        so single-device keys (and the stats strings tests/benchmarks
+        pin) are unchanged, while a mesh-sharded executable can never
+        alias a single-device one of the same bucket shape."""
+        return (f"mesh{self.devices}",) if self.mesh is not None else ()
+
     def key(self, bucket: int) -> tuple:
-        return (bucket, self.engine, self.conv_impl, blocks_key(self.blocks))
+        return (bucket, self.engine, self.conv_impl,
+                blocks_key(self.blocks)) + self._mesh_key()
 
     def _build(self):
         return bnn_serve_fn(engine=self.engine, conv_impl=self.conv_impl,
-                            blocks=self.blocks)
+                            blocks=self.blocks, mesh=self.mesh)
 
     def get(self, bucket: int):
         """The compiled callable for ``bucket``; builds (and counts a
@@ -137,11 +181,22 @@ class ExecutorCache:
     def run(self, images: np.ndarray) -> np.ndarray:
         """Execute the bucket-shaped batch (rows == some bucket size).
 
-        Returns host logits ``[bucket, num_classes]``.
+        Returns host logits ``[rows, num_classes]`` for the rows passed
+        in. On a meshed cache a batch whose row count does not divide
+        the device count is padded with bit-neutral zero rows up to the
+        next device multiple (and the pad rows' logits sliced back off)
+        rather than crashing in shard_map — the engine's ladder is
+        normalized to device multiples (``buckets.mesh_buckets``), so
+        this pad only fires for out-of-ladder dispatch.
         """
-        fn = self.get(images.shape[0])
+        n = images.shape[0]
+        run_n = -(-n // self.devices) * self.devices
+        fn = self.get(run_n)
+        if run_n != n:
+            pad = np.zeros((run_n - n,) + images.shape[1:], images.dtype)
+            images = np.concatenate([np.asarray(images), pad], axis=0)
         out = fn(self.packed, jnp.asarray(images))
-        return np.asarray(out)
+        return np.asarray(out)[:n]
 
     def warmup(self, buckets: Sequence[int]) -> int:
         """Compile every bucket ahead of traffic (zeros input; the
@@ -183,14 +238,14 @@ class RaggedExecutorCache(ExecutorCache):
 
     def key(self, extent: int) -> tuple:
         return (extent, self.engine, self.conv_impl,
-                blocks_key(self.blocks), "ragged")
+                blocks_key(self.blocks), "ragged") + self._mesh_key()
 
     def _build(self):
         return bnn_serve_fn(engine=self.engine, conv_impl=self.conv_impl,
-                            blocks=self.blocks, ragged=True)
+                            blocks=self.blocks, ragged=True, mesh=self.mesh)
 
     def extent_of(self, n: int) -> int:
-        return extent_for(n, tile=self.tile)
+        return extent_for(n, tile=self.tile, devices=self.devices)
 
     def run(self, images: np.ndarray) -> np.ndarray:
         """Execute an exact-row ragged batch at its extent class.

@@ -40,10 +40,17 @@ class _ShapeMesh:
 MESH = _ShapeMesh(pod=2, data=16, model=16)
 
 
+def _leaf(*shape):
+    # The rule functions read only np.shape(leaf); an abstract value
+    # keeps frontier-scale cases (the FSDP one is 1.25 TB dense) from
+    # actually allocating.
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
 def test_column_parallel_weight_spec():
     spec = sharding.param_spec(
         MESH, _path(["layers", 0, "attn", "q_proj", "w"]),
-        np.zeros((22, 12288, 12288)),
+        _leaf(22, 12288, 12288),
     )
     assert spec == P(None, "model", ("pod", "data"))
 
@@ -51,7 +58,7 @@ def test_column_parallel_weight_spec():
 def test_row_parallel_weight_spec():
     spec = sharding.param_spec(
         MESH, _path(["layers", 0, "ffn", "down_proj", "w"]),
-        np.zeros((22, 12288, 28672)),
+        _leaf(22, 12288, 28672),
     )
     assert spec == P(None, ("pod", "data"), "model")
 
@@ -62,7 +69,7 @@ def test_expert_stack_spec_small_replicates_over_data():
     # (§Perf hc7)
     spec = sharding.param_spec(
         MESH, _path(["layers", 0, "moe", "up_proj", "w"]),
-        np.zeros((48, 64, 1408, 2048)),
+        _leaf(48, 64, 1408, 2048),
     )
     assert spec == P(None, "model", None, None)
 
@@ -71,7 +78,7 @@ def test_expert_stack_spec_big_gets_fsdp():
     # arctic-sized stack (4.5e9 elems): too big to replicate over data
     spec = sharding.param_spec(
         MESH, _path(["layers", 0, "moe", "up_proj", "w"]),
-        np.zeros((35, 128, 4864, 7168)),
+        _leaf(35, 128, 4864, 7168),
     )
     assert spec == P(None, "model", None, ("pod", "data"))
 
@@ -91,7 +98,7 @@ def test_packed_weight_spec_replicated_over_data():
 
 def test_kv_cache_spec():
     spec = sharding.state_spec(
-        MESH, _path(["kv", "k"]), np.zeros((8, 128, 1024, 8, 128)))
+        MESH, _path(["kv", "k"]), _leaf(8, 128, 1024, 8, 128))
     assert spec == P(None, ("pod", "data"), "model", None, None)
 
 
@@ -99,6 +106,23 @@ def test_kv_cache_batch1_seq_sharded():
     spec = sharding.state_spec(
         MESH, _path(["kv", "k"]), np.zeros((8, 1, 2048, 8, 128)))
     assert spec == P(None, None, "model", None, None)
+
+
+def test_serve_specs_replicate_weights_shard_batch():
+    # DESIGN.md §10: the serving mesh contract — packed weights P()
+    # on every device, batch axis over "data", collective-free.
+    p_spec, x_spec, y_spec = sharding.serve_specs(_ShapeMesh(data=8))
+    assert p_spec == P()
+    assert x_spec == P("data") and y_spec == P("data")
+    # a mesh without a "data" axis degrades to fully replicated
+    p_spec, x_spec, y_spec = sharding.serve_specs(_ShapeMesh(model=4))
+    assert (p_spec, x_spec, y_spec) == (P(), P(None), P(None))
+
+
+def test_mesh_devices_counts_all_axes():
+    assert sharding.mesh_devices(None) == 1
+    assert sharding.mesh_devices(_ShapeMesh(data=8)) == 8
+    assert sharding.mesh_devices(MESH) == 2 * 16 * 16
 
 
 def _path(keys):

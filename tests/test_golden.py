@@ -78,6 +78,33 @@ def test_fused_pipeline_matches_golden(golden, seeded):
     np.testing.assert_array_equal(np.asarray(got, np.float32), want)
 
 
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs the conftest's 8 forced host devices")
+def test_golden_invariant_to_device_count(golden, seeded):
+    """ISSUE 7: the fixture is invariant to the serving mesh size — the
+    whole session already runs under 8 forced host devices (conftest),
+    and here the SAME pinned logits must come out of the mesh-sharded
+    dispatch path at every mesh size that divides the fixture batch (2
+    and 4 exact), plus the 8-device mesh through the ragged executor's
+    bit-neutral pad-and-slice path (4 real rows padded to extent 8).
+    Bit-identity holding is exactly why no fixture regen is needed."""
+    from repro.core.bnn import bnn_serve_fn
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serve import RaggedExecutorCache
+
+    _, want = golden
+    params, images = seeded
+    fused = pack_bnn_params_fused(params)
+    for n_dev in (2, 4):  # divide the 4-row fixture batch exactly
+        fn = bnn_serve_fn(engine="xla", mesh=make_serving_mesh(n_dev))
+        got = np.asarray(fn(fused, images), np.float32)
+        np.testing.assert_array_equal(got, want)
+    cache = RaggedExecutorCache(fused, engine="xla",
+                                mesh=make_serving_mesh(8))
+    got = np.asarray(cache.run(np.asarray(images)), np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
 def test_golden_fixture_is_exact_hex(golden):
     """Guard the fixture format itself: hex floats must round-trip and
     carry the ±1-dot structure (integer-valued dots scaled by the BN
