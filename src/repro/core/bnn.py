@@ -393,6 +393,21 @@ def bnn_apply_megakernel(
 # one-launch-per-stage forwards on pack_bnn_params_megakernel params.
 SERVE_ENGINES = ("xla", "xnor", "megakernel", "megakernel_xla")
 
+# Failover demotion ladder (DESIGN.md §11): on repeated kernel failure
+# a serving engine walks down its ladder, most-specialized first, each
+# rung strictly more conservative than the last.  Every rung is
+# bit-identical to the primary (the repo's bedrock invariant), so
+# failover is logit-exact.  The megakernel rungs need
+# pack_bnn_params_megakernel params, the fused rungs
+# pack_bnn_params_fused — FallbackPolicy skips rungs it holds no
+# params for.
+SERVE_FALLBACKS = {
+    "megakernel": ("xnor", "xla"),
+    "megakernel_xla": ("xla",),
+    "xnor": ("xla",),
+    "xla": (),
+}
+
 
 def bnn_serve_fn(
     *,

@@ -129,6 +129,42 @@ def make_elastic_mesh(devices: Optional[Sequence] = None,
     return jax.sharding.Mesh(dev_array, plan.axes)
 
 
+def serving_shrink_plan(n_surviving: int) -> int:
+    """Device count the serving mesh shrinks to: the largest power of
+    two <= ``n_surviving``.
+
+    The serving ladders (`serve.buckets.mesh_buckets`,
+    `serve.executor.default_extents`) round every rung up to a device
+    multiple, so a power-of-two successor keeps every warmed rung of a
+    power-of-two predecessor divisible — the shrunk cache re-warms the
+    *same* rung set at the new multiple and steady state stays
+    recompile-free (DESIGN.md §11).  Losing 1 of 8 devices therefore
+    lands on 4, not 7.
+    """
+    if n_surviving < 1:
+        return 0
+    return 1 << (int(n_surviving).bit_length() - 1)
+
+
+def shrink_serving_mesh(mesh, dead: Sequence[int]):
+    """The largest surviving serving mesh after losing ``dead`` (flat
+    device indices into ``mesh``), or None when no shrink is possible
+    (no valid dead index, or nothing would survive).
+
+    Always a 1-D ``("data",)`` mesh — the serving path's only layout
+    (DESIGN.md §10).
+    """
+    devices = list(np.asarray(mesh.devices).flat)
+    dead_set = {int(d) for d in dead if 0 <= int(d) < len(devices)}
+    if not dead_set:
+        return None
+    survivors = [d for i, d in enumerate(devices) if i not in dead_set]
+    n = serving_shrink_plan(len(survivors))
+    if n < 1:
+        return None
+    return jax.sharding.Mesh(np.asarray(survivors[:n]), ("data",))
+
+
 # ------------------------------ recovery loop ---------------------------------
 
 

@@ -52,8 +52,11 @@ from repro.core.bnn import (
 from repro.serve import (
     DEFAULT_BUCKETS,
     ContinuousServingEngine,
+    FallbackPolicy,
     QueueFull,
+    RetryPolicy,
     ServingEngine,
+    is_error,
     load_serving_blocks,
 )
 
@@ -106,6 +109,20 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
                   f"engine={args.engine} conv_impl={args.conv_impl} "
                   f"buckets={args.buckets}; falling back to 'auto'")
     slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
+    deadline_s = (args.deadline_ms / 1e3
+                  if args.deadline_ms is not None else None)
+    # --max-retries counts RE-dispatches; the policy counts total
+    # attempts (first dispatch included).
+    retry = RetryPolicy(max_attempts=args.max_retries + 1)
+    fallback = None
+    if args.fallback == "on":
+        # Arm the bit-identical demotion ladder: hold both param
+        # packings so every SERVE_FALLBACKS rung is reachable.
+        fallback = FallbackPolicy(
+            fused_params=pack_bnn_params_fused(params),
+            mega_params=(fused if args.engine.startswith("megakernel")
+                         else None),
+        )
     if args.scheduler == "continuous":
         return ContinuousServingEngine(
             fused,
@@ -117,6 +134,9 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
             max_queue_rows=args.max_queue_rows,
             slo_s=slo_s,
             mesh=mesh,
+            deadline_s=deadline_s,
+            retry=retry,
+            fallback=fallback,
             clock=clock,
         )
     eng = ServingEngine(
@@ -127,6 +147,9 @@ def build_engine(args, *, clock=time.monotonic) -> ServingEngine:
         buckets=args.buckets,
         max_wait_s=args.max_wait_ms / 1e3,
         mesh=mesh,
+        deadline_s=deadline_s,
+        retry=retry,
+        fallback=fallback,
         clock=clock,
     )
     # SLO is a measurement concern, not a policy one, for the bucket
@@ -169,8 +192,14 @@ def run_smoke(args) -> dict:
     # Verify the engine's core contract on the smoke traffic: per-request
     # logits are bit-identical to running that request's images alone.
     mismatches = 0
+    errored = 0
     for rid, imgs in zip(rids, requests):
         got = eng.take(rid)
+        if got is not None and is_error(got):
+            # terminal resilience marker (deadline/retries) — possible
+            # only when --deadline-ms is set tight; not a divergence
+            errored += 1
+            continue
         if args.engine.startswith("megakernel"):
             from repro.core.bnn import bnn_apply_megakernel
 
@@ -190,7 +219,7 @@ def run_smoke(args) -> dict:
     snap = eng.snapshot()
     print(f"served {snap['requests']['completed']} requests "
           f"({snap['requests']['images_completed']} images), "
-          f"{mismatches} logits mismatches")
+          f"{mismatches} logits mismatches, {errored} expired/failed")
     print(json.dumps(snap, indent=2))
     if mismatches:
         raise SystemExit(f"{mismatches} requests diverged from the "
@@ -238,6 +267,15 @@ def run_sustained(args) -> dict:
         print(f"SLO {snap['slo']['slo_s']*1e3:.0f}ms: goodput "
               f"{snap['slo']['goodput_images_per_s']:.1f} img/s "
               f"({snap['slo']['images_within_slo']} images within SLO)")
+    req, disp = snap["requests"], snap["dispatch"]
+    if (req["expired"] or req["failed"] or disp["retries"]
+            or snap["degraded"]):
+        print(f"resilience: {req['expired']} expired, {req['failed']} "
+              f"failed, {disp['retries']} batch retries, "
+              f"{disp['fallbacks']} fallbacks "
+              f"({' '.join(disp['engine_path']) or 'none'}), "
+              f"{snap['mesh']['shrinks']} mesh shrinks | "
+              f"degraded={snap['degraded']}")
     print(json.dumps(snap, indent=2))
     return snap
 
@@ -276,6 +314,17 @@ def main():
                          "SLO-aware max-wait")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="micro-batcher head-of-line latency bound")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (DESIGN.md §11): past "
+                         "it a request completes as DeadlineExceeded "
+                         "instead of being served late (default: none)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="re-dispatches of a failed batch before its "
+                         "requests complete as RequestFailed")
+    ap.add_argument("--fallback", default="off", choices=["on", "off"],
+                    help="'on' arms the bit-identical engine demotion "
+                         "ladder (SERVE_FALLBACKS) on repeated kernel "
+                         "failure")
     ap.add_argument("--blocks", default="auto", choices=["auto", "tuned"],
                     help="'tuned': use the serving config persisted in "
                          "the autotune cache (benchmarks/serving.py "

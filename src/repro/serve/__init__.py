@@ -14,8 +14,15 @@ the v2 continuous-batching scheduler over the ragged megakernel path.
 pad-to-bucket dispatch with ragged coalescing over tile-padded extent
 classes (DESIGN.md §9) plus admission control and an SLO-aware wait.
 
-See DESIGN.md §7/§9 for the batching designs and docs/api.md for the
-stats/snapshot schema.
+Both engines carry the §11 resilience layer (``repro.serve.faults``):
+per-request deadlines, bounded retry with backoff, bit-identical
+engine failover (`FallbackPolicy`), elastic mesh shrink on device
+loss, and a deterministic fault-injection harness (`FaultPlan`).
+``take()`` then returns either logits or a terminal
+`DeadlineExceeded`/`RequestFailed` marker (``is_error`` discriminates).
+
+See DESIGN.md §7/§9/§11 for the batching and failure designs and
+docs/api.md for the stats/snapshot schema.
 """
 
 from repro.serve.buckets import (
@@ -32,6 +39,18 @@ from repro.serve.continuous import (
     QueueFull,
 )
 from repro.serve.engine import ServingEngine
+from repro.serve.faults import (
+    DeadlineExceeded,
+    DeviceLost,
+    FallbackPolicy,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    NaNLogits,
+    RequestFailed,
+    RetryPolicy,
+    is_error,
+)
 from repro.serve.executor import (
     ExecutorCache,
     RaggedExecutorCache,
@@ -69,6 +88,16 @@ __all__ = [
     "Segment",
     "ServeStats",
     "percentile",
+    "DeadlineExceeded",
+    "RequestFailed",
+    "is_error",
+    "InjectedFault",
+    "NaNLogits",
+    "DeviceLost",
+    "FaultSpec",
+    "FaultPlan",
+    "RetryPolicy",
+    "FallbackPolicy",
     "default_serving_candidates",
     "load_serving_blocks",
     "tune_serving_blocks",

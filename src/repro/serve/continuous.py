@@ -62,7 +62,17 @@ DEFAULT_MAX_ROWS = 32  # per-dispatch row budget (the ladder's top rung / 4)
 class QueueFull(RuntimeError):
     """Admission control rejected a submit: queued rows would exceed
     ``max_queue_rows``. The request never entered the queue; the caller
-    retries later or sheds the work."""
+    retries later or sheds the work.
+
+    ``retry_after_s`` is the batcher's estimate of how long until the
+    overflow clears — the service-time EWMA applied to the rows past
+    the bound (falling back to the coalescing wait before the first
+    observation lands). A well-behaved client backs off at least this
+    long instead of hammering the front door."""
+
+    def __init__(self, msg: str, *, retry_after_s: Optional[float] = None):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 class ContinuousBatcher(MicroBatcher):
@@ -117,9 +127,12 @@ class ContinuousBatcher(MicroBatcher):
             self.max_queue_rows is not None
             and self._pending_rows + max(n, 1) > self.max_queue_rows
         ):
+            overflow = self._pending_rows + max(n, 1) - self.max_queue_rows
+            hint = self.est_service_s(overflow)
             raise QueueFull(
                 f"{self._pending_rows} rows queued + {n} > "
-                f"max_queue_rows {self.max_queue_rows}"
+                f"max_queue_rows {self.max_queue_rows}",
+                retry_after_s=hint if hint > 0.0 else self.max_wait_s,
             )
         return super().submit(images)
 
@@ -216,12 +229,18 @@ class ContinuousServingEngine(ServingEngine):
         slo_s: Optional[float] = None,
         slo_headroom: float = 0.5,
         mesh: object = None,
+        deadline_s: Optional[float] = None,
+        retry=None,
+        fallback=None,
+        faults=None,
+        heartbeat_timeout_s: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         # Deliberately NOT calling super().__init__: the base wires a
         # bucket MicroBatcher + bucket ExecutorCache; everything else
-        # (submit validation, _run scatter loop, take/cancel) is
-        # inherited behavior over the attributes set here.
+        # (submit validation, retry/deadline pump, _run scatter loop,
+        # take/cancel) is inherited behavior over the attributes set
+        # here (resilience state via the shared _init_resilience).
         from repro.serve.stats import ServeStats
 
         self.stats = ServeStats(scheduler="continuous", slo_s=slo_s)
@@ -242,17 +261,21 @@ class ContinuousServingEngine(ServingEngine):
         self._partial = {}
         self._filled = {}
         self.results = {}
+        self._init_resilience(deadline_s, retry, fallback, faults,
+                              heartbeat_timeout_s)
 
-    def warmup(self) -> int:
-        """Compile every tile-padded extent class before taking traffic.
-        Returns the number of executors compiled."""
-        return self.executors.warmup(self.extents)
+    def _warm_shapes(self):
+        """Tile-padded extent classes instead of bucket rungs — warmed
+        by both ``warmup`` and ``prewarm_fallback``."""
+        return self.extents
 
-    def submit(self, images: np.ndarray) -> int:
-        """Enqueue one request; raises :class:`QueueFull` (and counts
-        the rejection) when admission control turns it away."""
+    def submit(self, images: np.ndarray, *,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue one request; raises :class:`QueueFull` (carrying a
+        ``retry_after_s`` backoff hint, and counting the rejection)
+        when admission control turns it away."""
         try:
-            return super().submit(images)
+            return super().submit(images, deadline_s=deadline_s)
         except QueueFull:
             n = np.asarray(images).shape[0]
             self.stats.on_reject(n)
@@ -262,13 +285,24 @@ class ContinuousServingEngine(ServingEngine):
         """Ragged dispatch: exact rows assembled, extent-class padding
         applied inside the executor; the service wall feeds the
         SLO-aware wait's EWMA and the stats record the extent actually
-        run (pad waste = extent - real rows)."""
+        run (pad waste = extent - real rows). Runs through the base
+        engine's fault plan + NaN guard (`_execute_rows`); a faulted
+        dispatch contributes no service observation."""
         x = batch.assemble(self.batcher.requests)
         extent = self.executors.extent_of(x.shape[0])
         t0 = self.clock()
-        logits = self.executors.run(x)
+        logits = self._execute_rows(x)
         self.batcher.note_service(extent, self.clock() - t0)
         return logits, extent
+
+    def _on_remesh(self) -> None:
+        # The extent ladder is device-multiple-scaled; after an elastic
+        # shrink it must be recomputed at the survivor count so warmup
+        # compiles the classes extent_of will actually produce.
+        self.extents = default_extents(
+            self.batcher.max_rows, tile=self.executors.tile,
+            devices=self.executors.devices,
+        )
 
 
 __all__ = [

@@ -56,6 +56,8 @@ from repro.serve.stats import ServeStats
 
 IMAGE_SHAPE = (32, 32, 3)  # the CIFAR BNN's fixed per-image shape
 
+_UNSET = object()  # rebuild() sentinel: mesh=None is a meaningful override
+
 
 def extent_for(n: int, *, tile: int = RAGGED_TILE_N, devices: int = 1) -> int:
     """The tile-padded extent class a ragged ``n``-row batch dispatches
@@ -198,6 +200,25 @@ class ExecutorCache:
         out = fn(self.packed, jnp.asarray(images))
         return np.asarray(out)[:n]
 
+    def _ctor_kwargs(self) -> dict:
+        return dict(engine=self.engine, conv_impl=self.conv_impl,
+                    blocks=self.blocks, mesh=self.mesh, stats=self.stats)
+
+    def rebuild(self, *, packed=None, engine: Optional[str] = None,
+                mesh=_UNSET):
+        """A fresh cache of the same class with ``packed``/``engine``/
+        ``mesh`` overridden — the failover and mesh-shrink paths
+        (DESIGN.md §11).  The stats recorder is SHARED with the old
+        cache, so compile/hit accounting stays continuous across a
+        demotion or shrink; executables are not carried over (they are
+        specialized to the old engine/mesh)."""
+        kw = self._ctor_kwargs()
+        if engine is not None:
+            kw["engine"] = engine
+        if mesh is not _UNSET:
+            kw["mesh"] = mesh
+        return type(self)(self.packed if packed is None else packed, **kw)
+
     def warmup(self, buckets: Sequence[int]) -> int:
         """Compile every bucket ahead of traffic (zeros input; the
         executable is shape-specialized, values are irrelevant).
@@ -235,6 +256,11 @@ class RaggedExecutorCache(ExecutorCache):
                  **kwargs):
         super().__init__(packed_params, **kwargs)
         self.tile = int(tile)
+
+    def _ctor_kwargs(self) -> dict:
+        kw = super()._ctor_kwargs()
+        kw["tile"] = self.tile
+        return kw
 
     def key(self, extent: int) -> tuple:
         return (extent, self.engine, self.conv_impl,

@@ -7,7 +7,10 @@ Snapshot schema (``ServeStats.snapshot()``)::
     {"scheduler": "bucket" | "continuous",
      "requests": {"submitted": int, "completed": int,
                   "images_submitted": int, "images_completed": int,
-                  "rejected": int, "images_rejected": int},
+                  "rejected": int, "images_rejected": int,
+                  "expired": int, "images_expired": int,   # deadline
+                  "failed": int, "images_failed": int,     # retries gone
+                  "retried": int},        # requests touched by a retry
      "batches": {"dispatched": int, "real_rows": int, "padded_rows": int,
                  "dispatched_rows": int,           # real + padded
                  "padding_overhead": float,        # padded / (real+padded)
@@ -22,7 +25,12 @@ Snapshot schema (``ServeStats.snapshot()``)::
                    "p50": float, "p95": float, "p99": float, "max": float},
      "throughput": {"images_per_s": float, "wall_s": float},
      "slo": {"slo_s": float | None, "images_within_slo": int,
-             "goodput_images_per_s": float}}       # within-SLO imgs / wall
+             "goodput_images_per_s": float},       # within-SLO imgs / wall
+     "dispatch": {"retries": int,                  # batch redispatches
+                  "fallbacks": int,                # engine demotions
+                  "engine_path": ["old->new", ...]},
+     "mesh": {"shrinks": int, "devices": int | None},
+     "degraded": bool}    # any fallback or mesh shrink happened
 
 ``scheduler`` labels which dispatch policy produced the numbers (the
 bucket ladder or the continuous/ragged scheduler, DESIGN.md §7/§9); the
@@ -70,6 +78,16 @@ class ServeStats:
     completed_images: int = 0
     rejected_requests: int = 0
     rejected_images: int = 0
+    expired_requests: int = 0
+    expired_images: int = 0
+    failed_requests: int = 0
+    failed_images: int = 0
+    retried_requests: int = 0
+    batch_retries: int = 0
+    dispatch_fallbacks: int = 0
+    engine_path: list = dataclasses.field(default_factory=list)
+    mesh_shrinks: int = 0
+    mesh_devices: Optional[int] = None
     images_within_slo: int = 0
     dispatched_batches: int = 0
     real_rows: int = 0
@@ -109,6 +127,32 @@ class ServeStats:
         self.rejected_requests += 1
         self.rejected_images += n_images
 
+    def on_expire(self, n_images: int) -> None:
+        """A request's deadline passed before its logits did — completed
+        as a `DeadlineExceeded` result (DESIGN.md §11)."""
+        self.expired_requests += 1
+        self.expired_images += n_images
+
+    def on_fail(self, n_images: int) -> None:
+        """A request's batch exhausted its retry budget — completed as a
+        `RequestFailed` result."""
+        self.failed_requests += 1
+        self.failed_images += n_images
+
+    def on_retry(self, n_requests: int) -> None:
+        """A failed batch was re-enqueued at the queue front; counts one
+        batch retry and every live request riding in it."""
+        self.batch_retries += 1
+        self.retried_requests += n_requests
+
+    def on_fallback(self, old_engine: str, new_engine: str) -> None:
+        self.dispatch_fallbacks += 1
+        self.engine_path.append(f"{old_engine}->{new_engine}")
+
+    def on_shrink(self, old_devices: int, new_devices: int) -> None:
+        self.mesh_shrinks += 1
+        self.mesh_devices = new_devices
+
     def on_executor(self, key: str, *, hit: bool, compiled: bool) -> None:
         if hit:
             self.executor_hits += 1
@@ -141,6 +185,11 @@ class ServeStats:
                 "images_completed": self.completed_images,
                 "rejected": self.rejected_requests,
                 "images_rejected": self.rejected_images,
+                "expired": self.expired_requests,
+                "images_expired": self.expired_images,
+                "failed": self.failed_requests,
+                "images_failed": self.failed_images,
+                "retried": self.retried_requests,
             },
             "batches": {
                 "dispatched": self.dispatched_batches,
@@ -188,6 +237,16 @@ class ServeStats:
                     if wall > 0 and self.slo_s is not None else 0.0
                 ),
             },
+            "dispatch": {
+                "retries": self.batch_retries,
+                "fallbacks": self.dispatch_fallbacks,
+                "engine_path": list(self.engine_path),
+            },
+            "mesh": {
+                "shrinks": self.mesh_shrinks,
+                "devices": self.mesh_devices,
+            },
+            "degraded": bool(self.dispatch_fallbacks or self.mesh_shrinks),
         }
 
 

@@ -195,6 +195,23 @@ def test_straggler_detector_flags_persistent_outlier():
     assert 4 in flagged
 
 
+def test_straggler_detector_uniform_fleet_never_flags():
+    det = StragglerDetector(patience=2)
+    for _ in range(20):
+        assert det.observe({h: 1.0 for h in range(8)}) == []
+
+
+def test_straggler_detector_recovery_resets_strikes():
+    """A host that recovers before ``patience`` consecutive slow steps
+    is never flagged — the strike counter resets on every fast step."""
+    det = StragglerDetector(patience=3)
+    fleet = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    for _ in range(10):
+        assert det.observe({**fleet, 4: 5.0}) == []   # 1 strike
+        assert det.observe({**fleet, 4: 1.0}) == []   # recovered: reset
+    assert det.strikes[4] == 0
+
+
 def test_plan_mesh_shrinks_elastically():
     assert plan_mesh_for(512).shape == (2, 16, 16)
     assert plan_mesh_for(256).shape == (16, 16)
@@ -225,6 +242,52 @@ def test_run_with_recovery_restores_after_failure():
     )
     assert out["step"] == 5
     assert state["failures_left"] == 0
+
+
+def test_run_with_recovery_gives_up_after_max_restarts():
+    def step_fn(step):
+        raise WorkerFailure([0])
+
+    mon = HeartbeatMonitor(num_hosts=1, timeout=1e9)
+    with pytest.raises(WorkerFailure):
+        run_with_recovery(
+            num_steps=4, step_fn=step_fn, save_fn=lambda s: None,
+            restore_fn=lambda: 0, monitor=mon, max_restarts=2,
+        )
+
+
+def test_run_with_recovery_rebuilds_and_stops_monitoring_dead_hosts():
+    """On failure the driver calls ``rebuild_fn`` with the dead hosts
+    and evicts them from the heartbeat monitor, so a host that died
+    once cannot re-trigger WorkerFailure on the next check."""
+    state = {"failures_left": 1, "rebuilt_with": None}
+
+    def step_fn(step):
+        if step == 1 and state["failures_left"]:
+            state["failures_left"] -= 1
+            raise WorkerFailure([2, 1])
+        return {"step": step}
+
+    mon = HeartbeatMonitor(num_hosts=3, timeout=1e9)
+    out = run_with_recovery(
+        num_steps=3, step_fn=step_fn, save_fn=lambda s: None,
+        restore_fn=lambda: 0, monitor=mon,
+        rebuild_fn=lambda hosts: state.update(rebuilt_with=hosts),
+    )
+    assert out["step"] == 2
+    assert state["rebuilt_with"] == [1, 2]   # sorted by WorkerFailure
+    assert set(mon.last_beat) == {0}
+
+
+def test_run_with_recovery_checkpoint_cadence():
+    saves = []
+    mon = HeartbeatMonitor(num_hosts=1, timeout=1e9)
+    run_with_recovery(
+        num_steps=10, step_fn=lambda s: {"step": s},
+        save_fn=saves.append, restore_fn=lambda: 0, monitor=mon,
+        checkpoint_every=3,
+    )
+    assert saves == [3, 6, 9]
 
 
 # ------------------------------ checkpointing ---------------------------------

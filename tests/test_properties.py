@@ -531,3 +531,99 @@ def test_sharded_continuous_engine_serves_any_arrivals_bit_identical(
         np.testing.assert_array_equal(got, want)
     for extent in eng.snapshot()["batches"]["per_bucket"]:
         assert extent % 8 == 0  # every dispatch divides the mesh
+
+
+# ---------------------------------------------------------------------------
+# resilience (ISSUE 8, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    sizes=st.lists(st.integers(1, 6), min_size=1, max_size=6),
+    events=st.lists(st.sampled_from(["poll", "wait"]), max_size=6),
+    rate=st.floats(0.0, 0.5),
+    deadline=st.sampled_from([None, 0.5, 30.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_faulty_engine_never_loses_a_request(serve_fused_params, sizes,
+                                             events, rate, deadline, seed):
+    """ISSUE 8 property: under ANY seeded fault schedule (raise + NaN +
+    latency at up to 50% of dispatches), ragged arrivals, and optional
+    deadlines, EVERY submitted request resolves to exactly one of
+    {bit-identical logits, DeadlineExceeded, RequestFailed} — none is
+    ever lost or served corrupt bits — and completion order among
+    successes stays FIFO."""
+    from repro.core.bnn import bnn_apply_fused
+    from repro.serve import (DeadlineExceeded, FaultPlan, RequestFailed,
+                             RetryPolicy, is_error)
+
+    class Clock:
+        def __init__(self):
+            self.t = 0.0
+        def __call__(self):
+            return self.t
+        def advance(self, dt):
+            self.t += dt
+
+    clk = Clock()
+    eng = _continuous_engine(serve_fused_params, "xla", "im2col", clk)
+    eng.deadline_s = deadline
+    eng.retry = RetryPolicy(max_attempts=2, backoff_base_s=0.05,
+                            jitter=0.0)
+    eng.faults = FaultPlan(rate=rate, kinds=("raise", "nan", "latency"),
+                           latency_s=0.3, seed=seed, sleep=clk.advance)
+    rng = np.random.default_rng(seed)
+    it = iter(events + ["poll"] * len(sizes))
+    requests = {}
+    resolved = []
+    for n in sizes:
+        x = rng.normal(size=(n, 32, 32, 3)).astype(np.float32)
+        requests[eng.submit(x)] = x
+        if next(it) == "wait":
+            clk.t += 1.0
+        resolved.extend(eng.step())
+    resolved.extend(eng.drain())
+    assert eng.batcher.pending_rows == 0
+    # exactly-once resolution: no request lost, none resolved twice
+    assert sorted(resolved) == sorted(requests)
+    completed = []
+    for rid in resolved:        # in resolution order
+        got = eng.take(rid)
+        assert got is not None
+        if is_error(got):
+            assert isinstance(got, (DeadlineExceeded, RequestFailed))
+            continue
+        completed.append(rid)
+        want = np.asarray(
+            bnn_apply_fused(serve_fused_params,
+                            jnp.asarray(requests[rid]), engine="xla")
+        )
+        np.testing.assert_array_equal(got, want)
+    # FIFO among successes (rids are assigned in submit order)
+    assert completed == sorted(completed)
+
+
+@given(
+    base=st.floats(0.1, 10.0),
+    inflation=st.floats(2.0, 10.0),
+    hosts=st.integers(3, 8),
+    patience=st.integers(1, 5),
+)
+@settings(max_examples=25, deadline=None)
+def test_straggler_detector_ewma_property(base, inflation, hosts, patience):
+    """For ANY fleet size >= 3, base step time, and >= 2x persistent
+    inflation: the MAD-robust z-score flags the straggler after exactly
+    ``patience`` observations — never earlier, and never a healthy
+    host."""
+    from repro.distributed.fault_tolerance import StragglerDetector
+
+    det = StragglerDetector(patience=patience)
+    times = {h: base for h in range(hosts - 1)}
+    times[hosts - 1] = base * inflation
+    for round_ in range(1, patience + 3):
+        flagged = det.observe(times)
+        if round_ < patience:
+            assert flagged == []
+        else:
+            assert flagged == [hosts - 1]
