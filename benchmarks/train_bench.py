@@ -1,0 +1,192 @@
+"""Training benchmark: the train half of the train-to-serve loop
+(ISSUE 9, DESIGN.md §12). Writes BENCH_train.json at the repo root.
+
+Three sections:
+
+1. **step_time** — median wall time of one jitted STE train step
+   (FAKE_QUANT forward, batch BN, straight-through backward, AdamW with
+   latent clip) at the benchmark batch size, plus the compile time.
+2. **learning** — a short deterministic CPU training run
+   (``train_bnn``): first-vs-last train loss, held-out eval loss and
+   accuracy on the float-boundary forward (bit-identical to packed
+   serving, so this IS serving accuracy). Gates:
+   * **loss drops >= 30%** from the first train step to the mean of the
+     final quarter of steps;
+   * **eval accuracy above chance** by a wide margin
+     (>= ``ACC_GATE`` vs 0.10 chance on 10 classes).
+3. **dp_compressions** — one jitted shard_map data-parallel step per
+   grad-compression mode (fp32 / EF-int8 / 1-bit EF-sign-SGD) on a
+   2-device mesh: median step time and the per-mode train loss after a
+   fixed number of steps, so a compression regression shows up as a
+   loss gap, not just a crash. Self-nulls when fewer than 2 devices
+   are available.
+
+``--check`` (the CI gate, per ROADMAP Tending) exits nonzero if any
+non-null gate fails. ``--smoke`` shrinks steps/batch for CI wall-clock.
+
+  PYTHONPATH=src python -m benchmarks.train_bench [--smoke] [--check]
+"""
+
+from __future__ import annotations
+
+import os
+
+SIM_DEVICES = 2
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={SIM_DEVICES}"
+    ).strip()
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from benchmarks._util import bench_path, time_fn, write_bench  # noqa: E402
+from repro.core.bnn import init_bnn_params  # noqa: E402
+from repro.data.pipeline import (  # noqa: E402
+    DataConfig,
+    synthetic_cifar_batches,
+)
+from repro.train.bnn_trainer import (  # noqa: E402
+    DP_COMPRESSIONS,
+    BNNTrainerConfig,
+    _BNNTask,
+    bnn_clip_predicate,
+    init_dp_error_feedback,
+    make_dp_train_step,
+    train_bnn,
+)
+from repro.train.step import init_opt_state, make_train_step  # noqa: E402
+
+LOSS_DROP_GATE = 0.30    # final-quarter mean train loss vs first step
+ACC_GATE = 0.30          # held-out accuracy; chance is 0.10
+
+
+def bench_step_time(cfg: BNNTrainerConfig) -> dict:
+    task = _BNNTask(cfg.model_config())
+    params = init_bnn_params(jax.random.PRNGKey(cfg.seed))
+    opt = init_opt_state(params)
+    batch = next(iter(synthetic_cifar_batches(
+        DataConfig(global_batch=cfg.batch, seed=cfg.data_seed))))
+    feed = {"images": batch["images"], "labels": batch["labels"]}
+    step = jax.jit(make_train_step(task, cfg.train_config(),
+                                   clip_predicate=bnn_clip_predicate))
+    t0 = time.perf_counter()
+    out = step(params, opt, feed)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    sec, _ = time_fn(step, params, opt, feed, repeats=3)
+    return {"batch": cfg.batch, "compile_s": compile_s,
+            "step_time_s": sec,
+            "images_per_s": cfg.batch / sec}
+
+
+def bench_learning(cfg: BNNTrainerConfig) -> dict:
+    res = train_bnn(cfg)
+    losses = res.history["loss"]
+    tail = losses[-max(1, len(losses) // 4):]
+    drop = 1.0 - float(np.mean(tail)) / losses[0]
+    return {
+        "steps": cfg.steps,
+        "batch": cfg.batch,
+        "first_loss": losses[0],
+        "tail_mean_loss": float(np.mean(tail)),
+        "loss_drop": drop,
+        "eval_loss": res.eval_loss,
+        "eval_acc": res.eval_acc,
+        "first_step_lr_scale": res.history["lr_scale"][0],
+        "gates": {
+            "loss_drops": drop >= LOSS_DROP_GATE,
+            "above_chance_acc": res.eval_acc >= ACC_GATE,
+            "first_step_live": res.history["lr_scale"][0] > 0.0,
+        },
+    }
+
+
+def bench_dp(cfg: BNNTrainerConfig, steps: int) -> dict | None:
+    if jax.device_count() < 2:
+        return None
+    n_dev = 2
+    task = _BNNTask(cfg.model_config())
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("data",))
+    data = list(
+        b for _, b in zip(range(steps), synthetic_cifar_batches(
+            DataConfig(global_batch=cfg.batch, seed=cfg.data_seed)))
+    )
+    out = {}
+    for comp in DP_COMPRESSIONS:
+        step = jax.jit(make_dp_train_step(
+            task, cfg.train_config(), mesh, grad_compression=comp,
+            clip_predicate=bnn_clip_predicate,
+        ))
+        params = init_bnn_params(jax.random.PRNGKey(cfg.seed))
+        opt = init_opt_state(params)
+        err = init_dp_error_feedback(params, n_dev)
+        feed0 = {k: data[0][k] for k in ("images", "labels")}
+        sec, _ = time_fn(step, params, opt, err, feed0, repeats=3)
+        loss = None
+        for b in data:
+            feed = {k: b[k] for k in ("images", "labels")}
+            params, opt, err, metrics = step(params, opt, err, feed)
+            loss = float(metrics["loss"])
+        out[comp] = {"step_time_s": sec, "final_loss": loss}
+    base = out["none"]["final_loss"]
+    out["gates"] = {
+        # compressed runs must not blow up relative to fp32: same ballpark
+        # loss after the same steps (EF makes this tight in practice)
+        f"{c}_tracks_fp32": out[c]["final_loss"] <= max(2.0 * base,
+                                                        base + 0.5)
+        for c in ("int8", "signsgd")
+    }
+    return out
+
+
+def collect_gates(doc: dict) -> dict:
+    gates = dict(doc["learning"]["gates"])
+    if doc["dp_compressions"] is not None:
+        gates.update(doc["dp_compressions"]["gates"])
+    return gates
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for CI wall-clock")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if any gate fails")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = BNNTrainerConfig(steps=24, batch=32, lr=3e-3,
+                               warmup_steps=2, eval_batches=2)
+        dp_steps = 4
+    else:
+        cfg = BNNTrainerConfig(steps=40, batch=32, lr=3e-3,
+                               warmup_steps=5, eval_batches=4)
+        dp_steps = 8
+
+    doc = {
+        "step_time": bench_step_time(cfg),
+        "learning": bench_learning(cfg),
+        "dp_compressions": bench_dp(
+            BNNTrainerConfig(steps=dp_steps, batch=16, warmup_steps=2),
+            dp_steps,
+        ),
+    }
+    write_bench(bench_path("train"), doc)
+    gates = collect_gates(doc)
+    for name, ok in gates.items():
+        print(f"gate {name}: {'PASS' if ok else 'FAIL'}")
+    if args.check and not all(gates.values()):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

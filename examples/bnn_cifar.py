@@ -1,69 +1,85 @@
-"""The paper's own experiment, end to end: train the Courbariaux BNN on
-(synthetic) CIFAR-10, then run packed 1-bit inference and compare all
-three kernel modes (paper §4).
+"""The paper's own experiment, end to end — now the full train-to-serve
+loop (DESIGN.md §12): train the Courbariaux BNN on (synthetic) CIFAR-10
+with the real trainer (STE forward, latent clip, running BN statistics,
+resumable checkpoints), export the trained model to every packed
+serving format with a bit-identity probe, and write the compact
+sign-form checkpoint.
 
-  PYTHONPATH=src python examples/bnn_cifar.py [--steps 100]
+This script (with ``--steps 120 --export tests/golden/bnn_trained_ckpt.npz``)
+is what produced the committed trained checkpoint behind
+tests/golden/bnn_logits.json — rerunning it reproduces that artifact
+bit-for-bit (deterministic seeds, stateless data stream).
+
+  PYTHONPATH=src python examples/bnn_cifar.py [--steps 120] \
+      [--checkpoint-dir /tmp/bnn_ckpts] [--export trained.npz]
 """
 
 import argparse
+import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.bnn_cifar import CONTROL_GROUP, SIMULATION, XLA_PACKED
 from repro.core.bnn import (
-    BNNConfig,
-    bnn_apply,
-    bnn_loss,
-    init_bnn_params,
-    pack_bnn_params,
+    bnn_eval_logits,
+    load_binary_checkpoint,
+    pack_trained_params,
+    save_binary_checkpoint,
 )
 from repro.data.pipeline import DataConfig, synthetic_cifar_batches
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.train.bnn_trainer import BNNTrainerConfig, train_bnn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="resumable float checkpoints (checkpoint/manager)")
+    ap.add_argument("--export", default=None,
+                    help="write the compact sign-form checkpoint here")
     args = ap.parse_args()
 
-    key = jax.random.PRNGKey(0)
-    params = init_bnn_params(key)
-    opt = adamw_init(params)
-    # latent_clip: BNN keeps latent weights in [-1, 1] (STE support)
-    acfg = AdamWConfig(lr=1e-3, latent_clip=True)
-
-    @jax.jit
-    def step(params, opt, images, labels):
-        (loss, acc), grads = jax.value_and_grad(
-            lambda p: bnn_loss(p, images, labels, SIMULATION), has_aux=True
-        )(params)
-        params, opt = adamw_update(grads, opt, params, acfg)
-        return params, opt, loss, acc
-
-    data = synthetic_cifar_batches(DataConfig(global_batch=args.batch))
+    cfg = BNNTrainerConfig(
+        steps=args.steps, batch=args.batch, lr=args.lr,
+        warmup_steps=max(1, args.steps // 12),
+        checkpoint_dir=args.checkpoint_dir,
+    )
     t0 = time.time()
-    for i, b in zip(range(args.steps), data):
-        params, opt, loss, acc = step(params, opt, b["images"], b["labels"])
-        if i % 20 == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss {float(loss):.4f} acc {float(acc):.3f}")
-    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
+    res = train_bnn(cfg, verbose=True)
+    resumed = f" (resumed from {res.start_step})" if res.start_step else ""
+    print(f"trained {args.steps - res.start_step} steps in "
+          f"{time.time() - t0:.1f}s{resumed}")
+    print(f"held-out eval: loss {res.eval_loss:.4f} acc {res.eval_acc:.3f} "
+          f"(chance 0.10)")
 
-    # pack to 1-bit and check the three inference modes agree on argmax
-    packed = pack_bnn_params(params)
-    x = next(data)["images"]
-    sim = bnn_apply(params, x, SIMULATION)
-    pk = bnn_apply(packed, x, XLA_PACKED)
-    agree = float(jnp.mean(jnp.argmax(sim, -1) == jnp.argmax(pk, -1)))
-    print(f"packed vs simulation argmax agreement: {agree:.3f}")
+    # Export: pack every serving format, VERIFIED bit-identical to the
+    # trained float-boundary forward on a probe batch (raises otherwise).
+    probe = next(iter(synthetic_cifar_batches(
+        DataConfig(global_batch=4, seed=2024))))["images"]
+    packs = pack_trained_params(res.params, probe_images=probe)
+    print("export verified bit-identical across engines:",
+          ", ".join(sorted(packs)))
 
-    fbytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(params))
-    pbytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(packed))
-    print(f"weights {fbytes/1e6:.1f} MB -> {pbytes/1e6:.1f} MB "
+    fbytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(res.params))
+    pbytes = sum(
+        np.asarray(v).nbytes for v in jax.tree.leaves(packs["packed"])
+    )
+    print(f"weights {fbytes/1e6:.1f} MB -> {pbytes/1e6:.1f} MB packed "
           f"({fbytes/pbytes:.1f}x)")
+
+    if args.export:
+        save_binary_checkpoint(args.export, res.params)
+        re = load_binary_checkpoint(args.export)
+        a = np.asarray(bnn_eval_logits(res.params, probe))
+        b = np.asarray(bnn_eval_logits(re, probe))
+        assert np.array_equal(a, b), "sign-form round trip diverged"
+        pack_trained_params(re, probe_images=probe)
+        print(f"sign-form checkpoint: {args.export} "
+              f"({os.path.getsize(args.export)/1e6:.2f} MB, "
+              f"round trip bit-identical)")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,26 @@
 """(Re)generate the golden-logits fixture tests/golden/bnn_logits.json.
 
-The fixture pins the PACKED CIFAR-BNN logits for a fixed seed so kernel
-refactors that silently change numerics fail tier-1 immediately
-(tests/test_golden.py). Floats are stored as float32 hex strings —
-exact round-trip, human-diffable.
+The fixture pins the PACKED CIFAR-BNN logits so kernel refactors that
+silently change numerics fail tier-1 immediately (tests/test_golden.py).
+Floats are stored as float32 hex strings — exact round-trip,
+human-diffable.
+
+Since the train-to-serve loop closed (DESIGN.md §12) the fixture is
+generated from the committed TRAINED sign-form checkpoint
+(tests/golden/bnn_trained_ckpt.npz, written by examples/bnn_cifar.py) —
+the logits under regression are the ones a trained model actually
+serves, not a random init's. ``--random-init SEED`` remains as a debug
+escape hatch for bisecting numerics changes without a checkpoint.
 
 Run from the repo root after an INTENTIONAL numerics change:
 
-  PYTHONPATH=src python scripts/gen_golden_logits.py
+  PYTHONPATH=src python scripts/gen_golden_logits.py \
+      --from-checkpoint tests/golden/bnn_trained_ckpt.npz
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 
@@ -19,16 +28,22 @@ import jax
 import numpy as np
 
 from repro.core.binarize import QuantMode
-from repro.core.bnn import BNNConfig, bnn_apply, init_bnn_params, pack_bnn_params
+from repro.core.bnn import (
+    BNNConfig,
+    bnn_apply,
+    init_bnn_params,
+    load_binary_checkpoint,
+    pack_bnn_params,
+)
 
-PARAM_SEED = 7
 IMAGE_SEED = 2024
 BATCH = 4
-OUT = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden" / "bnn_logits.json"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "tests" / "golden" / "bnn_logits.json"
+DEFAULT_CKPT = ROOT / "tests" / "golden" / "bnn_trained_ckpt.npz"
 
 
-def compute_logits() -> np.ndarray:
-    params = init_bnn_params(jax.random.PRNGKey(PARAM_SEED))
+def compute_logits(params) -> np.ndarray:
     images = jax.random.normal(
         jax.random.PRNGKey(IMAGE_SEED), (BATCH, 32, 32, 3)
     )
@@ -40,16 +55,40 @@ def compute_logits() -> np.ndarray:
 
 
 def main():
-    logits = compute_logits()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--from-checkpoint", type=pathlib.Path, default=DEFAULT_CKPT,
+        help="sign-form checkpoint (core.bnn.save_binary_checkpoint) "
+             "to pin logits for [default: the committed trained ckpt]",
+    )
+    ap.add_argument(
+        "--random-init", type=int, default=None, metavar="SEED",
+        help="debug escape hatch: pin a random init instead of a "
+             "checkpoint (tests/test_golden.py only accepts the "
+             "checkpoint form)",
+    )
+    args = ap.parse_args()
+
+    if args.random_init is not None:
+        params = init_bnn_params(jax.random.PRNGKey(args.random_init))
+        source = {"param_seed": args.random_init}
+        src_desc = f"init_bnn_params(PRNGKey({args.random_init}))"
+    else:
+        params = load_binary_checkpoint(args.from_checkpoint)
+        rel = args.from_checkpoint.resolve().relative_to(ROOT)
+        source = {"checkpoint": str(rel)}
+        src_desc = f"trained sign-form checkpoint {rel}"
+
+    logits = compute_logits(params)
     fixture = {
         "description": (
             "PACKED (engine=xla) logits of the CIFAR BNN for "
-            f"init_bnn_params(PRNGKey({PARAM_SEED})) on "
+            f"{src_desc} on "
             f"normal(PRNGKey({IMAGE_SEED}), ({BATCH}, 32, 32, 3)). "
             "float32 hex — exact. Regenerate ONLY for intentional "
             "numeric changes: scripts/gen_golden_logits.py"
         ),
-        "param_seed": PARAM_SEED,
+        **source,
         "image_seed": IMAGE_SEED,
         "shape": list(logits.shape),
         "generated_with_jax": jax.__version__,

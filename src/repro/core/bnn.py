@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -170,11 +170,19 @@ def pack_bnn_params_fused(params: dict, *, use_scale: bool = False) -> dict:
     }
 
 
-def _batchnorm(p: dict, x: jnp.ndarray, training: bool) -> jnp.ndarray:
+def _batchnorm(
+    p: dict, x: jnp.ndarray, training: bool,
+    stats: Optional[list] = None,
+) -> jnp.ndarray:
     axes = tuple(range(x.ndim - 1))
     if training:
         mean = jnp.mean(x, axes)
         var = jnp.var(x, axes)
+        if stats is not None:
+            # batch statistics the trainer folds into the running
+            # mean/var buffers (update_bn_stats) — collected as aux so
+            # the packed eval path sees trained statistics.
+            stats.append({"mean": mean, "var": var})
     else:
         mean, var = p["mean"], p["var"]
     inv = lax.rsqrt(var + BN_EPS)  # BN_EPS shared with fold_bn_params
@@ -193,8 +201,19 @@ def bnn_apply(
     cfg: BNNConfig,
     *,
     training: bool = False,
+    return_stats: bool = False,
 ) -> jnp.ndarray:
-    """images [N, 32, 32, 3] -> logits [N, 10]."""
+    """images [N, 32, 32, 3] -> logits [N, 10].
+
+    ``training=True`` uses batch BatchNorm statistics (and the STE
+    binarization is differentiable end to end — ``core.binarize``).
+    ``return_stats=True`` additionally returns the per-layer batch
+    (mean, var) as ``{"bn_conv": [...], "bn_fc": [...]}`` so the
+    trainer can maintain the running statistics packed inference uses
+    (``update_bn_stats``); only meaningful with ``training=True``.
+    """
+    stats_conv: Optional[list] = [] if return_stats else None
+    stats_fc: Optional[list] = [] if return_stats else None
     x = images
     packed = cfg.mode == QuantMode.PACKED
     for i in range(len(CONV_CHANNELS)):
@@ -216,7 +235,7 @@ def bnn_apply(
             params["conv"][i], x, lcfg, stride=1, pad=1,
             kh=3 if packed else None, kw=3 if packed else None,
         )
-        x = _batchnorm(params["bn_conv"][i], x, training)
+        x = _batchnorm(params["bn_conv"][i], x, training, stats_conv)
         if i in POOL_AFTER:
             x = _maxpool2(x)
         x = binarize_activations(x) if not packed else jnp.clip(x, -1, 1)
@@ -228,9 +247,11 @@ def bnn_apply(
         last = j == len(FC_SIZES) - 1
         lcfg = cfg.layer_cfg(binarize_acts=True)
         x = bit_linear(params["fc"][j], x, lcfg)
-        x = _batchnorm(params["bn_fc"][j], x, training)
+        x = _batchnorm(params["bn_fc"][j], x, training, stats_fc)
         if not last:
             x = binarize_activations(x) if not packed else jnp.clip(x, -1, 1)
+    if return_stats:
+        return x, {"bn_conv": stats_conv, "bn_fc": stats_fc}
     return x
 
 
@@ -502,3 +523,211 @@ def bnn_loss(params, images, labels, cfg: BNNConfig):
     loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
     acc = jnp.mean(jnp.argmax(logits, -1) == labels)
     return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Train-to-serve (DESIGN.md §12): STE training loss with BN statistics,
+# trained-checkpoint export, and the packed-format exporter that feeds
+# every serving engine.
+# ---------------------------------------------------------------------------
+
+
+def bnn_train_loss(params, images, labels, cfg: BNNConfig):
+    """Training loss whose aux carries everything the trainer needs:
+    ``(loss, {"acc", "bn_stats"})``.
+
+    Identical math to :func:`bnn_loss`, but the BatchNorm batch
+    statistics come back as aux so the train step can fold them into
+    the running ``mean``/``var`` buffers (:func:`update_bn_stats`) —
+    packed inference runs in eval mode and reads exactly those buffers,
+    so without this the exported model would normalize with the init
+    stats (mean 0 / var 1) and serve garbage.
+    """
+    (logits, stats) = bnn_apply(
+        params, images, cfg, training=True, return_stats=True
+    )
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"acc": acc, "bn_stats": stats}
+
+
+def update_bn_stats(params: dict, bn_stats: dict, *,
+                    momentum: float = 0.9) -> dict:
+    """EMA the collected batch statistics into the BN buffers:
+    ``new = momentum * old + (1 - momentum) * batch`` — the standard
+    running-stat update, applied OUTSIDE the gradient path (mean/var are
+    buffers, not trainable params; AdamW never touches them because
+    their gradient is zero and the trainer runs with weight_decay only
+    on weights)."""
+    out = dict(params)
+    for group, key in (("bn_conv", "bn_conv"), ("bn_fc", "bn_fc")):
+        out[key] = [
+            {
+                **bn,
+                "mean": momentum * bn["mean"] + (1 - momentum) * s["mean"],
+                "var": momentum * bn["var"] + (1 - momentum) * s["var"],
+            }
+            for bn, s in zip(params[key], bn_stats[group])
+        ]
+    return out
+
+
+def bnn_eval_logits(params: dict, images: jnp.ndarray, *,
+                    use_scale: bool = False) -> jnp.ndarray:
+    """The trained model's float-boundary forward: FAKE_QUANT math in
+    eval mode (running BN stats, ±1 values held in float). This is the
+    reference the packed engines must reproduce BIT-IDENTICALLY: every
+    dot product of ±1 vectors is integer-valued (exact in float32 up to
+    K = 2^24), sign conventions agree (``sign(0) := +1`` on both
+    paths), and eval BatchNorm applies the very same ``_batchnorm``
+    expression — so float-boundary and packed logits are equal floats,
+    not approximately equal ones."""
+    return bnn_apply(
+        params, images,
+        BNNConfig(mode=QuantMode.FAKE_QUANT, use_scale=use_scale),
+        training=False,
+    )
+
+
+def pack_trained_params(
+    params: dict,
+    *,
+    use_scale: bool = False,
+    probe_images: Optional[jnp.ndarray] = None,
+    probe_conv_impls: tuple[str, ...] = ("im2col", "direct"),
+) -> dict:
+    """Export a trained checkpoint into the packed formats every serving
+    engine consumes:
+
+      * ``"packed"``     — :func:`pack_bnn_params` (unfused float-boundary
+        PACKED path, engines xla/xnor/unpack),
+      * ``"fused"``      — :func:`pack_bnn_params_fused` (serving engines
+        ``"xla"``/``"xnor"``),
+      * ``"megakernel"`` — :func:`pack_bnn_params_megakernel` (serving
+        engines ``"megakernel"``/``"megakernel_xla"``).
+
+    With ``probe_images`` the export is VERIFIED before it ships: the
+    trained model's float-boundary logits (:func:`bnn_eval_logits`) must
+    be bit-identical to the packed logits of all four serving engines
+    (x conv_impl for the per-layer fused chain) on the probe batch, per
+    the repo's bit-identity contract. A mismatch raises ValueError
+    naming the diverging engine — a trained checkpoint that does not
+    serve exactly is a bug, not a tolerance.
+    """
+    import numpy as np
+
+    out = {
+        "packed": pack_bnn_params(params, use_scale=use_scale),
+        "fused": pack_bnn_params_fused(params, use_scale=use_scale),
+        "megakernel": pack_bnn_params_megakernel(params, use_scale=use_scale),
+    }
+    if probe_images is None:
+        return out
+
+    want = np.asarray(bnn_eval_logits(params, probe_images,
+                                      use_scale=use_scale))
+    got = {
+        "packed/xla": np.asarray(bnn_apply(
+            out["packed"], probe_images,
+            BNNConfig(mode=QuantMode.PACKED, engine="xla",
+                      use_scale=use_scale),
+        )),
+    }
+    for engine in ("xla", "xnor"):
+        for conv_impl in probe_conv_impls:
+            got[f"fused/{engine}/{conv_impl}"] = np.asarray(bnn_apply_fused(
+                out["fused"], probe_images, engine=engine,
+                conv_impl=conv_impl, use_scale=use_scale,
+            ))
+    for engine, inner in (("megakernel", "xnor"), ("megakernel_xla", "xla")):
+        got[engine] = np.asarray(bnn_apply_megakernel(
+            out["megakernel"], probe_images, engine=inner,
+            use_scale=use_scale,
+        ))
+    bad = {k: int((v != want).sum()) for k, v in got.items()
+           if not np.array_equal(v, want)}
+    if bad:
+        raise ValueError(
+            "pack_trained_params bit-identity check failed — packed "
+            "logits diverge from the trained float-boundary forward on "
+            f"the probe batch: {bad} (engine -> #differing logits). "
+            "The exported model would not serve what was trained."
+        )
+    return out
+
+
+# --- compact sign-form checkpoint (the committable trained artifact) -------
+#
+# A trained BNN's forward depends on its latent weights ONLY through
+# their sign (FAKE_QUANT binarizes every weight matrix, first conv
+# included), so a checkpoint meant for SERVING can store 1 bit per
+# weight: ~32x smaller than the float latents (the CIFAR net drops from
+# ~56 MB to ~1.8 MB — small enough to commit as the golden fixture's
+# source of truth). Biases and BatchNorm buffers stay exact float32.
+# Loading reconstructs latent weights as ±1.0 floats: since
+# sign(sign(w)) == sign(w) (with the sign(0) := +1 convention shared by
+# ste_sign and pack_bits), the loaded model's float-boundary AND packed
+# forwards are bit-identical to the trained model's. Not for resuming
+# training (latent magnitudes and alpha scales are gone); use
+# checkpoint/manager.py for that.
+
+BINARY_CKPT_FORMAT = "bnn-sign-v1"
+
+
+def save_binary_checkpoint(path: str, params: dict) -> None:
+    """Write the sign-form checkpoint (.npz). See module note above."""
+    import numpy as np
+
+    arrays: dict[str, Any] = {"format": np.asarray(BINARY_CKPT_FORMAT)}
+    for group in ("conv", "fc"):
+        for i, p in enumerate(params[group]):
+            w = np.asarray(p["w"])
+            arrays[f"{group}{i}/w_bits"] = np.packbits(
+                (w >= 0).reshape(-1)
+            )
+            arrays[f"{group}{i}/w_shape"] = np.asarray(w.shape)
+            if "b" in p:
+                arrays[f"{group}{i}/b"] = np.asarray(p["b"], np.float32)
+    for group in ("bn_conv", "bn_fc"):
+        for i, bn in enumerate(params[group]):
+            for k, v in bn.items():
+                arrays[f"{group}{i}/{k}"] = np.asarray(v, np.float32)
+    np.savez_compressed(path, **arrays)
+
+
+def load_binary_checkpoint(path: str) -> dict:
+    """Load a :func:`save_binary_checkpoint` file back into a params
+    pytree with ±1.0 latent weights (see the sign-form note above)."""
+    import numpy as np
+
+    with np.load(path) as z:
+        if str(z["format"]) != BINARY_CKPT_FORMAT:
+            raise ValueError(
+                f"{path}: unknown binary checkpoint format {z['format']!r}"
+                f" (expected {BINARY_CKPT_FORMAT!r})"
+            )
+        data = {k: z[k] for k in z.files}
+
+    params: dict[str, Any] = {"conv": [], "bn_conv": [], "fc": [], "bn_fc": []}
+    for group in ("conv", "fc"):
+        i = 0
+        while f"{group}{i}/w_bits" in data:
+            shape = tuple(int(s) for s in data[f"{group}{i}/w_shape"])
+            n = int(np.prod(shape))
+            bits = np.unpackbits(data[f"{group}{i}/w_bits"])[:n]
+            w = (bits.astype(np.float32) * 2.0 - 1.0).reshape(shape)
+            p = {"w": jnp.asarray(w)}
+            if f"{group}{i}/b" in data:
+                p["b"] = jnp.asarray(data[f"{group}{i}/b"])
+            params[group].append(p)
+            i += 1
+    for group in ("bn_conv", "bn_fc"):
+        i = 0
+        while f"{group}{i}/gamma" in data:
+            params[group].append({
+                k: jnp.asarray(data[f"{group}{i}/{k}"])
+                for k in ("gamma", "beta", "mean", "var")
+            })
+            i += 1
+    return params

@@ -5,9 +5,18 @@
 value_and_grad over the model loss (remat'd scan inside), global-norm
 clip, AdamW with latent-weight clipping (BNN training detail), optional
 microbatch gradient accumulation (scan over microbatches — the
-activation-memory knob), optional error-feedback int8 gradient
-compression on the data-parallel axis (see distributed/compression.py
-for scope notes).
+activation-memory knob). The model's own loss metrics (accuracy, BN
+batch statistics, ...) ride along in the returned ``metrics`` dict —
+averaged over microbatches when accumulating — so BNN trainers can
+maintain running BatchNorm statistics without a second forward pass
+(train/bnn_trainer.py). ``clip_predicate`` selects which param leaves
+the optimizer's latent clip applies to (the binarized latent weights).
+
+The schedule is fed the POST-increment optimizer step (``count + 1``):
+``cosine_schedule(0)`` returns 0.0 during warmup, so feeding the
+pre-increment count would multiply the very first update by a zero
+learning rate — an entire wasted accumulated batch when
+``microbatches > 1`` (regression-tested in tests/test_train.py).
 
 ``make_decode_step`` / ``make_prefill`` wrap the model's serving
 functions — these are what the decode/prefill dry-run cells lower.
@@ -17,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +46,40 @@ class TrainConfig:
     total_steps: int = 10_000
 
 
-def make_train_step(model: Model, tcfg: TrainConfig):
+def _split_microbatches(batch, microbatches: int):
+    """Reshape every array leaf ``[B, ...] -> [microbatches, B/mb, ...]``.
+
+    Raises an actionable ValueError instead of letting a bare reshape
+    die with a cryptic shape error (or, worse, silently mis-split a
+    leaf whose leading dim differs from the batch size).
+    """
+    leaves = jax.tree_util.tree_leaves_with_path(batch)
+    if not leaves:
+        raise ValueError("empty batch")
+    sizes = {jax.tree_util.keystr(path): jnp.shape(leaf)[0] if jnp.ndim(leaf) else None
+             for path, leaf in leaves}
+    dims = set(sizes.values())
+    if None in dims or len(dims) != 1:
+        raise ValueError(
+            f"gradient accumulation needs every batch leaf to share one "
+            f"leading batch dim; got leading dims {sizes} (drop scalar "
+            f"bookkeeping keys like 'step' before the train step)"
+        )
+    (bsz,) = dims
+    if bsz % microbatches != 0:
+        raise ValueError(
+            f"batch size {bsz} is not divisible by "
+            f"tcfg.microbatches={microbatches}; pick a batch size that "
+            f"is a multiple of the microbatch count"
+        )
+    return jax.tree.map(
+        lambda t: t.reshape(microbatches, bsz // microbatches, *t.shape[1:]),
+        batch,
+    )
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    clip_predicate: Optional[Callable] = None):
     def loss_fn(params, batch):
         loss, metrics = model.loss(params, batch)
         return loss, metrics
@@ -49,34 +91,36 @@ def make_train_step(model: Model, tcfg: TrainConfig):
         return loss, metrics, grads
 
     def train_step(params, opt_state, batch):
-        step = opt_state["adam"]["count"]
+        # post-increment step: adamw_update below runs with count+1, and
+        # cosine_schedule(0) == 0.0 — the pre-increment count would make
+        # the first optimizer step a no-op (warmup off-by-one).
+        step = opt_state["adam"]["count"] + 1
         if tcfg.microbatches > 1:
             def micro(carry, mb):
                 acc, = carry
                 loss, metrics, grads = grads_of(params, mb)
                 return (jax.tree.map(jnp.add, acc, grads),), (loss, metrics)
 
-            mbs = jax.tree.map(
-                lambda t: t.reshape(tcfg.microbatches,
-                                    t.shape[0] // tcfg.microbatches,
-                                    *t.shape[1:]),
-                batch,
-            )
+            mbs = _split_microbatches(batch, tcfg.microbatches)
             zero = jax.tree.map(jnp.zeros_like, params)
-            (gsum,), (losses, _) = jax.lax.scan(micro, (zero,), mbs)
+            (gsum,), (losses, mmetrics) = jax.lax.scan(micro, (zero,), mbs)
             grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
             loss = jnp.mean(losses)
+            model_metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0),
+                                         mmetrics)
         else:
-            loss, _, grads = grads_of(params, batch)
+            loss, model_metrics, grads = grads_of(params, batch)
 
         grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
         lr_scale = cosine_schedule(
             step, warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps
         )
         new_params, new_adam = adamw_update(
-            grads, opt_state["adam"], params, tcfg.adamw, lr_scale=lr_scale
+            grads, opt_state["adam"], params, tcfg.adamw, lr_scale=lr_scale,
+            clip_predicate=clip_predicate,
         )
-        metrics = {"loss": loss, "grad_norm": gnorm,
+        metrics = {**model_metrics,
+                   "loss": loss, "grad_norm": gnorm,
                    "lr_scale": lr_scale}
         return new_params, {"adam": new_adam}, metrics
 

@@ -172,6 +172,114 @@ def test_psum_compressed_in_shard_map():
     np.testing.assert_allclose(out, g, atol=0.05)
 
 
+def test_signsgd_error_feedback_reduces_bias():
+    """EF-sign-SGD (ISSUE 9): one round keeps only 1 bit/coordinate, but
+    with error feedback the running sum of decompressed grads converges
+    to the true gradient — the residual carries everything the sign
+    threw away into later rounds.
+
+    Unlike int8 (whose per-round error is already bounded by half a
+    quantization step), a 1-bit code with one SHARED scale makes small
+    coordinates oscillate around their true value — so the guarantee is
+    the EF one: the time-averaged decompressed gradient converges, and
+    keeps improving with more rounds (measured: mean |avg - g| of
+    0.041 / 0.013 / 0.004 at 50 / 200 / 800 rounds)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(0, 1, (256,)).astype(np.float32))
+
+    def avg_error(rounds):
+        err = jnp.zeros_like(g_true)
+        acc = jnp.zeros_like(g_true)
+        for _ in range(rounds):
+            deq, err = compression.signsgd_compress_decompress(g_true, err)
+            acc = acc + deq
+        return float(jnp.mean(jnp.abs(acc / rounds - g_true)))
+
+    e50, e800 = avg_error(50), avg_error(800)
+    assert e50 < 5e-2
+    assert e800 < 1e-2
+    assert e800 < e50 / 4  # genuinely converging, not plateaued
+
+
+def test_signsgd_single_round_is_scaled_sign():
+    g = jnp.linspace(-1.0, 1.0, 255)
+    deq, err = compression.signsgd_compress_decompress(g, jnp.zeros_like(g))
+    scale = float(jnp.mean(jnp.abs(g)))
+    np.testing.assert_allclose(
+        np.asarray(deq), scale * np.sign(np.where(g == 0, 1.0, g)),
+        rtol=1e-6,
+    )
+    # lossless in the EF sense: deq + err reconstructs g exactly
+    np.testing.assert_allclose(np.asarray(deq + err), np.asarray(g),
+                               atol=1e-6)
+
+
+def test_psum_signsgd_in_shard_map():
+    from jax.experimental.shard_map import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    g = jnp.arange(8, dtype=jnp.float32) - 3.5
+
+    def f(g):
+        mean, err = compression.psum_signsgd(g, jnp.zeros_like(g), "data")
+        return mean, err
+
+    mean, err = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P())(g)
+    # single device: mean == scale * sign(g), and EF reconstructs g
+    scale = float(jnp.mean(jnp.abs(g)))
+    np.testing.assert_allclose(
+        np.asarray(mean), scale * np.where(np.asarray(g) >= 0, 1.0, -1.0),
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(np.asarray(mean + err), np.asarray(g),
+                               atol=1e-6)
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs >= 2 devices")
+def test_signsgd_convergence_tracks_fp32():
+    """Convergence gate (ISSUE 9): plain SGD on a 2-device least-squares
+    problem, gradients all-reduced three ways — fp32 pmean, EF-int8, and
+    1-bit EF-sign-SGD. Both compressed runs must reach (near) the fp32
+    baseline's final loss: error feedback is exactly what makes 1-bit
+    gradients usable, and this is the test that would catch losing it."""
+    from jax.experimental.shard_map import shard_map
+
+    n_dev, n, d, lr, steps = 2, 64, 8, 0.05, 300
+    rng = np.random.default_rng(3)
+    w_true = rng.normal(size=(d,)).astype(np.float32)
+    x = rng.normal(size=(n_dev, n, d)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(n_dev, n)).astype(np.float32)
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("data",))
+
+    def run(reduce_fn):
+        def shard_step(w, err, xs, ys):
+            xs, ys = xs[0], ys[0]          # peel the shard axis
+            g = 2.0 * xs.T @ (xs @ w - ys) / xs.shape[0]
+            g, new_err = reduce_fn(g, err[0])
+            return w - lr * g, new_err[None]
+
+        step = jax.jit(shard_map(
+            shard_step, mesh=mesh,
+            in_specs=(P(), P("data"), P("data"), P("data")),
+            out_specs=(P(), P("data")),
+            check_rep=False,
+        ))
+        w = jnp.zeros((d,))
+        err = jnp.zeros((n_dev, d))
+        for _ in range(steps):
+            w, err = step(w, err, x, y)
+        resid = x.reshape(-1, d) @ w - y.reshape(-1)
+        return float(jnp.mean(resid**2))
+
+    loss_fp32 = run(lambda g, e: (jax.lax.pmean(g, "data"), e))
+    loss_int8 = run(lambda g, e: compression.psum_compressed(g, e, "data"))
+    loss_sign = run(lambda g, e: compression.psum_signsgd(g, e, "data"))
+    # the problem's noise floor is ~1e-4; every run must solve it
+    assert loss_fp32 < 5e-4
+    assert loss_int8 < 5 * loss_fp32
+    assert loss_sign < 5 * loss_fp32
+
+
 # ---------------------------- fault tolerance ---------------------------------
 
 

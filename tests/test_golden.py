@@ -1,7 +1,14 @@
-"""Golden-logits regression: the PACKED CIFAR-BNN logits for a fixed
-seed are pinned in tests/golden/bnn_logits.json (float32 hex — exact),
-so a kernel refactor that silently changes numerics fails tier-1
-immediately instead of shipping.
+"""Golden-logits regression: the PACKED CIFAR-BNN logits of the
+committed TRAINED checkpoint are pinned in tests/golden/bnn_logits.json
+(float32 hex — exact), so a kernel refactor that silently changes
+numerics fails tier-1 immediately instead of shipping.
+
+Since the train-to-serve loop closed, the fixture is generated from
+tests/golden/bnn_trained_ckpt.npz — a sign-form checkpoint
+(core.bnn.save_binary_checkpoint) produced by a real STE training run
+(examples/bnn_cifar.py). Regressing the logits a TRAINED model serves
+is the point: a random init exercises the same kernels but not the
+same stakes.
 
 The fixture is EXACT by design. Two legitimate reasons it can move:
 
@@ -24,15 +31,18 @@ import pytest
 
 from repro.core.binarize import QuantMode
 from repro.core.bnn import (
+    BINARY_CKPT_FORMAT,
     BNNConfig,
     bnn_apply,
     bnn_apply_fused,
-    init_bnn_params,
+    bnn_eval_logits,
+    load_binary_checkpoint,
     pack_bnn_params,
     pack_bnn_params_fused,
 )
 
-FIXTURE = pathlib.Path(__file__).parent / "golden" / "bnn_logits.json"
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+FIXTURE = GOLDEN_DIR / "bnn_logits.json"
 
 
 @pytest.fixture(scope="module")
@@ -47,14 +57,36 @@ def golden():
 
 
 @pytest.fixture(scope="module")
-def seeded():
-    data = json.loads(FIXTURE.read_text())
-    params = init_bnn_params(jax.random.PRNGKey(data["param_seed"]))
+def seeded(golden):
+    data, _ = golden
+    assert "checkpoint" in data, (
+        "fixture must be generated from the trained checkpoint "
+        "(scripts/gen_golden_logits.py without --random-init)"
+    )
+    ckpt = FIXTURE.parent.parent.parent / data["checkpoint"]
+    params = load_binary_checkpoint(ckpt)
     images = jax.random.normal(
         jax.random.PRNGKey(data["image_seed"]),
         tuple(data["shape"][:1]) + (32, 32, 3),
     )
     return params, images
+
+
+def test_checkpoint_format_tag():
+    with np.load(GOLDEN_DIR / "bnn_trained_ckpt.npz") as z:
+        assert str(z["format"]) == BINARY_CKPT_FORMAT
+
+
+def test_checkpoint_latents_are_sign_form(seeded):
+    """The committed checkpoint stores 1 bit/weight; loading must
+    reconstruct exact ±1.0 latents (sign(sign(w)) == sign(w) is what
+    makes the forward bit-identical to the float run that produced
+    it)."""
+    params, _ = seeded
+    for group in ("conv", "fc"):
+        for layer in params[group]:
+            w = np.asarray(layer["w"])
+            assert set(np.unique(w)) <= {-1.0, 1.0}
 
 
 def test_packed_logits_match_golden(golden, seeded):
@@ -64,6 +96,17 @@ def test_packed_logits_match_golden(golden, seeded):
         pack_bnn_params(params), images,
         BNNConfig(mode=QuantMode.PACKED, engine="xla"),
     )
+    np.testing.assert_array_equal(np.asarray(got, np.float32), want)
+
+
+def test_float_boundary_matches_golden(golden, seeded):
+    """The FAKE_QUANT eval forward — the reference the training loop
+    optimizes — pins to the SAME fixture as the packed engines: this is
+    the train-to-serve contract (DESIGN.md §12) grounded in a committed
+    artifact."""
+    _, want = golden
+    params, images = seeded
+    got = bnn_eval_logits(params, images)
     np.testing.assert_array_equal(np.asarray(got, np.float32), want)
 
 
@@ -81,13 +124,20 @@ def test_fused_pipeline_matches_golden(golden, seeded):
 @pytest.mark.skipif(jax.device_count() < 8,
                     reason="needs the conftest's 8 forced host devices")
 def test_golden_invariant_to_device_count(golden, seeded):
-    """ISSUE 7: the fixture is invariant to the serving mesh size — the
-    whole session already runs under 8 forced host devices (conftest),
-    and here the SAME pinned logits must come out of the mesh-sharded
-    dispatch path at every mesh size that divides the fixture batch (2
-    and 4 exact), plus the 8-device mesh through the ragged executor's
-    bit-neutral pad-and-slice path (4 real rows padded to extent 8).
-    Bit-identity holding is exactly why no fixture regen is needed."""
+    """ISSUE 7: serving is invariant to the mesh size — the whole
+    session already runs under 8 forced host devices (conftest), and
+    the jitted single-device forward, the mesh-sharded dispatch at
+    every mesh size that divides the fixture batch (2 and 4), and the
+    8-device mesh through the ragged executor's bit-neutral
+    pad-and-slice path (4 real rows padded to extent 8) must all agree
+    BIT-IDENTICALLY with each other.
+
+    Against the (eager-computed) fixture the jitted paths are pinned to
+    <= 1 ulp instead: with a TRAINED checkpoint the final BN affine has
+    b != 0, and XLA's jit-time FMA contraction of ``a*dot + b`` rounds
+    once where the eager path rounds twice. Deterministic per build —
+    the old random-init fixture masked it only because its folded
+    b == 0 makes the FMA exact."""
     from repro.core.bnn import bnn_serve_fn
     from repro.launch.mesh import make_serving_mesh
     from repro.serve import RaggedExecutorCache
@@ -95,14 +145,17 @@ def test_golden_invariant_to_device_count(golden, seeded):
     _, want = golden
     params, images = seeded
     fused = pack_bnn_params_fused(params)
+    base = np.asarray(bnn_serve_fn(engine="xla")(fused, images),
+                      np.float32)
+    np.testing.assert_allclose(base, want, rtol=0, atol=2.4e-7)
     for n_dev in (2, 4):  # divide the 4-row fixture batch exactly
         fn = bnn_serve_fn(engine="xla", mesh=make_serving_mesh(n_dev))
         got = np.asarray(fn(fused, images), np.float32)
-        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got, base)
     cache = RaggedExecutorCache(fused, engine="xla",
                                 mesh=make_serving_mesh(8))
     got = np.asarray(cache.run(np.asarray(images)), np.float32)
-    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, base)
 
 
 def test_golden_fixture_is_exact_hex(golden):

@@ -97,6 +97,97 @@ def test_packed_linear_matches_fakequant(din, dout, b, seed):
                                rtol=2e-5, atol=2e-4)
 
 
+# ---------------------------------------------------------------------------
+# STE training boundary (ISSUE 9, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 200), scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_ste_sign_gradient_is_htanh_window(n, scale, seed):
+    """The straight-through estimator's backward is the clamped
+    pass-through: d/dx ste_sign(x) == 1 for |x| <= 1 and == 0 strictly
+    outside — the exact support AdamW's latent clip pins weights to
+    (a latent outside [-1, 1] would have zero gradient forever)."""
+    from repro.core.binarize import ste_sign
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, n).astype(np.float32))
+    g = jax.grad(lambda v: jnp.sum(ste_sign(v)))(x)
+    want = (np.abs(np.asarray(x)) <= 1.0).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(g), want)
+
+
+@given(
+    n=st.integers(1, 200), scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_ste_sign_forward_matches_pack_convention(n, scale, seed):
+    """Forward sign convention: ste_sign(x) == where(x >= 0, 1, -1) —
+    including x == 0 -> +1 — which is the SAME predicate pack_bits /
+    pack_channels use, so training, float-boundary eval, and the packed
+    engines binarize identically (the hinge of the bit-identity
+    contract)."""
+    from repro.core.binarize import ste_sign
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, scale, n).astype(np.float32)
+    x[rng.random(n) < 0.1] = 0.0        # force exact zeros into the draw
+    got = np.asarray(ste_sign(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.where(x >= 0, 1.0, -1.0))
+    # and the packed path binarizes the same values to the same bits
+    pad = -n % 32
+    packed = bitops.pack_bits(jnp.asarray(got if pad == 0 else
+                                          np.pad(got, (0, pad),
+                                                 constant_values=1.0))[None],
+                              axis=1)
+    rt = np.asarray(bitops.unpack_bits(packed, axis=1))[0, :n]
+    np.testing.assert_array_equal(rt, got)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_trained_export_roundtrip_property(seed):
+    """pack_trained_params round trip for ANY model weights: snap a
+    random init to sign form (what save/load_binary_checkpoint commits),
+    export, and the packed engines' logits equal the float-boundary
+    eval forward EXACTLY. Runs the cheap exact engines (packed/xla +
+    fused xla over both conv lowerings) — the full engine matrix
+    including the interpret-Pallas xnor/megakernel legs is asserted
+    deterministically on the committed checkpoint in tests/test_train.py
+    (interpret Pallas inside a hypothesis loop would be minutes per
+    example)."""
+    from repro.core.bnn import (
+        BNNConfig, bnn_apply, bnn_apply_fused, bnn_eval_logits,
+        init_bnn_params, pack_trained_params,
+    )
+
+    params = init_bnn_params(jax.random.PRNGKey(seed))
+    # sign-form snap — the committed-checkpoint transform
+    for group in ("conv", "fc"):
+        params[group] = [
+            {**p, "w": jnp.where(p["w"] >= 0, 1.0, -1.0)}
+            for p in params[group]
+        ]
+    images = jax.random.normal(jax.random.fold_in(
+        jax.random.PRNGKey(seed), 1), (2, 32, 32, 3))
+    out = pack_trained_params(params)      # no probe: cheap engines below
+    want = np.asarray(bnn_eval_logits(params, images))
+    got_packed = np.asarray(bnn_apply(
+        out["packed"], images,
+        BNNConfig(mode=QuantMode.PACKED, engine="xla"),
+    ))
+    np.testing.assert_array_equal(got_packed, want)
+    for conv_impl in ("im2col", "direct"):
+        got = np.asarray(bnn_apply_fused(
+            out["fused"], images, engine="xla", conv_impl=conv_impl))
+        np.testing.assert_array_equal(got, want)
+
+
 @given(
     n=st.integers(2, 300), scale=st.floats(1e-3, 1e3),
     seed=st.integers(0, 2**31 - 1),

@@ -1,0 +1,318 @@
+"""The train half of the train-to-serve loop (ISSUE 9, DESIGN.md §12):
+
+* warmup off-by-one regression — the schedule must see the
+  POST-increment optimizer step, or cosine_schedule(0) == 0.0 turns the
+  entire first optimizer step into a no-op;
+* actionable microbatch errors instead of cryptic reshape failures;
+* model metrics (accuracy, BN batch stats) threading through
+  make_train_step, including the microbatch-accumulation path;
+* train_bnn: loss decreases, latent clip invariant, running BN stats
+  move, checkpoints write and RESUME;
+* pack_trained_params: the committed trained checkpoint exports to all
+  engine formats bit-identically (the full engine x conv_impl matrix on
+  a fixed artifact — the hypothesis round-trip in test_properties.py
+  covers random models on the cheap engines);
+* the shard_map data-parallel step across all grad compressions.
+"""
+
+import dataclasses
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.checkpoint import manager as ckpt_manager
+from repro.core.bnn import (
+    bnn_eval_logits,
+    init_bnn_params,
+    load_binary_checkpoint,
+    pack_trained_params,
+    save_binary_checkpoint,
+)
+from repro.data.pipeline import DataConfig, synthetic_cifar_batches
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import cosine_schedule
+from repro.train.bnn_trainer import (
+    DP_COMPRESSIONS,
+    BNNTrainerConfig,
+    _BNNTask,
+    bnn_clip_predicate,
+    init_dp_error_feedback,
+    make_dp_train_step,
+    train_bnn,
+)
+from repro.train.step import (
+    TrainConfig,
+    _split_microbatches,
+    init_opt_state,
+    make_train_step,
+)
+
+GOLDEN_CKPT = pathlib.Path(__file__).parent / "golden" / "bnn_trained_ckpt.npz"
+
+
+@dataclasses.dataclass(frozen=True)
+class _ToyTask:
+    """Quadratic model.loss stand-in: loss = mean((x @ w - y)^2)."""
+
+    def loss(self, params, batch):
+        pred = batch["x"] @ params["w"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, {"mae": jnp.mean(jnp.abs(pred - batch["y"]))}
+
+
+def _toy_setup(batch=8, din=4):
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(din, 1)).astype(np.float32))}
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(batch, din)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(batch, 1)).astype(np.float32)),
+    }
+    return params, batch
+
+
+# ------------------------- warmup off-by-one ---------------------------------
+
+
+def test_first_step_has_nonzero_lr():
+    """Regression (ISSUE 9): the schedule is fed the post-increment
+    step. cosine_schedule(0) == 0.0, so the pre-increment count would
+    multiply the very first update by a zero learning rate — a wasted
+    step, and with gradient accumulation a wasted accumulated batch."""
+    assert float(cosine_schedule(0, warmup_steps=10, total_steps=100)) == 0.0
+    params, batch = _toy_setup()
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=0.1), warmup_steps=10,
+                       total_steps=100)
+    step = make_train_step(_ToyTask(), tcfg)
+    new_params, _, metrics = step(params, init_opt_state(params), batch)
+    assert float(metrics["lr_scale"]) > 0.0
+    # and therefore the params actually moved on step 1
+    assert np.any(np.asarray(new_params["w"]) != np.asarray(params["w"]))
+
+
+def test_warmup_schedule_is_linear_in_post_increment_step():
+    params, batch = _toy_setup()
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=0.1), warmup_steps=4,
+                       total_steps=100)
+    step = make_train_step(_ToyTask(), tcfg)
+    opt = init_opt_state(params)
+    scales = []
+    for _ in range(4):
+        params, opt, metrics = step(params, opt, batch)
+        scales.append(float(metrics["lr_scale"]))
+    np.testing.assert_allclose(scales, [0.25, 0.5, 0.75, 1.0], rtol=1e-6)
+
+
+# ------------------------- microbatch validation -----------------------------
+
+
+def test_microbatch_indivisible_batch_raises_actionable():
+    params, batch = _toy_setup(batch=6)
+    tcfg = TrainConfig(microbatches=4)
+    step = make_train_step(_ToyTask(), tcfg)
+    with pytest.raises(ValueError, match=r"batch size 6.*microbatches=4"):
+        step(params, init_opt_state(params), batch)
+
+
+def test_microbatch_scalar_leaf_raises_actionable():
+    params, batch = _toy_setup(batch=8)
+    batch = dict(batch, step=jnp.asarray(3))  # bookkeeping scalar
+    tcfg = TrainConfig(microbatches=2)
+    step = make_train_step(_ToyTask(), tcfg)
+    with pytest.raises(ValueError, match=r"scalar bookkeeping keys"):
+        step(params, init_opt_state(params), batch)
+
+
+def test_microbatch_mismatched_leading_dims_raise():
+    batch = {"x": jnp.zeros((8, 3)), "y": jnp.zeros((4, 1))}
+    with pytest.raises(ValueError, match="leading"):
+        _split_microbatches(batch, 2)
+
+
+def test_split_microbatches_shape():
+    batch = {"x": jnp.zeros((8, 3)), "y": jnp.zeros((8, 1))}
+    out = _split_microbatches(batch, 4)
+    assert out["x"].shape == (4, 2, 3)
+    assert out["y"].shape == (4, 2, 1)
+
+
+# ------------------------- metrics threading ---------------------------------
+
+
+def test_model_metrics_ride_along():
+    params, batch = _toy_setup()
+    step = make_train_step(_ToyTask(), TrainConfig())
+    _, _, metrics = step(params, init_opt_state(params), batch)
+    assert set(metrics) >= {"mae", "loss", "grad_norm", "lr_scale"}
+    assert np.isfinite(float(metrics["mae"]))
+
+
+def test_microbatch_metrics_average_matches_full_batch():
+    """Accumulated gradients average over microbatches, and so must the
+    model metrics — for this quadratic task the per-microbatch MAE mean
+    equals neither 0 nor the full-batch value in general, so just check
+    finiteness + loss consistency against the mathematically equal
+    mean-of-means decomposition (equal microbatch sizes)."""
+    params, batch = _toy_setup(batch=8)
+    full = make_train_step(_ToyTask(), TrainConfig())
+    micro = make_train_step(_ToyTask(), TrainConfig(microbatches=4))
+    _, _, m_full = full(params, init_opt_state(params), batch)
+    _, _, m_micro = micro(params, init_opt_state(params), batch)
+    np.testing.assert_allclose(float(m_micro["loss"]),
+                               float(m_full["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(float(m_micro["mae"]),
+                               float(m_full["mae"]), rtol=1e-5)
+
+
+# ------------------------- the BNN trainer -----------------------------------
+
+
+def test_train_bnn_learns_and_respects_invariants(tmp_path):
+    cfg = BNNTrainerConfig(
+        steps=20, batch=32, lr=3e-3, warmup_steps=2, eval_batches=1,
+        checkpoint_dir=str(tmp_path), checkpoint_every=10,
+    )
+    res = train_bnn(cfg)
+    # warmup fix: step 1 is live
+    assert res.history["lr_scale"][0] > 0.0
+    # learning signal: back-half mean loss clearly below the first loss
+    # (measured: ~1.6 vs 2.75 for this config; 0.5 margin kills noise)
+    assert np.mean(res.history["loss"][10:]) < res.history["loss"][0] - 0.5
+    # latent clip invariant after real optimizer steps
+    for group in ("conv", "fc"):
+        for layer in res.params[group]:
+            w = np.asarray(layer["w"])
+            assert w.min() >= -1.0 and w.max() <= 1.0
+    # running BN stats moved off the init values (mean 0 / var 1)
+    m0 = np.asarray(res.params["bn_conv"][0]["mean"])
+    assert np.any(m0 != 0.0)
+    # checkpoints were written and validate
+    assert ckpt_manager.latest_valid_step(str(tmp_path)) == cfg.steps
+
+
+def test_train_bnn_resumes_from_checkpoint(tmp_path):
+    """Simulate preemption the honest way: run the FULL job with
+    checkpoints, delete the final checkpoint (as if the process died
+    after step 2), and rerun the SAME config. The cosine horizon is
+    ``total_steps = cfg.steps``, so a shorter-steps run is NOT a prefix
+    of the full run — resume must replay under the original horizon."""
+    cfg = BNNTrainerConfig(steps=4, batch=8, warmup_steps=1,
+                           eval_batches=1, checkpoint_dir=str(tmp_path),
+                           checkpoint_every=2)
+    full = train_bnn(cfg)
+    assert full.start_step == 0
+    shutil.rmtree(tmp_path / f"step_{cfg.steps:08d}")
+    assert ckpt_manager.latest_valid_step(str(tmp_path)) == 2
+    resumed = train_bnn(cfg)
+    assert resumed.start_step == 2
+    # deterministic data stream + saved opt state => identical end params
+    for a, b in zip(jax.tree.leaves(full.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------- trained-checkpoint export -------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_params():
+    assert GOLDEN_CKPT.exists(), (
+        "committed trained checkpoint missing — run examples/bnn_cifar.py"
+    )
+    return load_binary_checkpoint(GOLDEN_CKPT)
+
+
+def test_pack_trained_params_engine_matrix(trained_params):
+    """The committed trained checkpoint exports to every serving-engine
+    format and the probe verifies ALL of them bit-identical to the
+    float-boundary forward (pack_trained_params raises otherwise):
+    packed/xla, fused xla+xnor x im2col+direct, megakernel + its xla
+    twin."""
+    images = jax.random.normal(jax.random.PRNGKey(5), (2, 32, 32, 3))
+    out = pack_trained_params(trained_params, probe_images=images)
+    assert set(out) == {"packed", "fused", "megakernel"}
+
+
+def test_sign_checkpoint_roundtrip_bit_identical(trained_params, tmp_path):
+    images = jax.random.normal(jax.random.PRNGKey(6), (2, 32, 32, 3))
+    p = str(tmp_path / "rt.npz")
+    save_binary_checkpoint(p, trained_params)
+    re = load_binary_checkpoint(p)
+    np.testing.assert_array_equal(
+        np.asarray(bnn_eval_logits(trained_params, images)),
+        np.asarray(bnn_eval_logits(re, images)),
+    )
+
+
+def test_pack_trained_params_detects_corruption(trained_params):
+    """The export probe must refuse to ship a checkpoint that cannot
+    serve what it computes. A latent sign flip stays self-consistent
+    (the probe re-derives the reference from the same params), but a
+    poisoned final BN variance drives every forward to NaN — and under
+    the exact-equality contract NaN != NaN, so the probe raises and
+    names the diverging engines instead of exporting garbage."""
+    var = np.asarray(trained_params["bn_fc"][-1]["var"]).copy()
+    var[0] = -1.0
+    forged = {**trained_params,
+              "bn_fc": list(trained_params["bn_fc"][:-1])
+              + [{**trained_params["bn_fc"][-1], "var": jnp.asarray(var)}]}
+    images = jax.random.normal(jax.random.PRNGKey(7), (2, 32, 32, 3))
+    with pytest.raises(ValueError, match="bit-identity"):
+        pack_trained_params(forged, probe_images=images)
+    # a sign flip is a DIFFERENT trained model, not corruption: packing
+    # it against its own forward must still pass the probe
+    w = np.asarray(trained_params["fc"][0]["w"]).copy()
+    w[0, 0] = -w[0, 0]
+    flipped = {**trained_params,
+               "fc": [{**trained_params["fc"][0], "w": jnp.asarray(w)}]
+               + list(trained_params["fc"][1:])}
+    pack_trained_params(flipped, probe_images=images)
+
+
+# ------------------------- data-parallel trainer -----------------------------
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs >= 2 devices")
+@pytest.mark.parametrize("compression", DP_COMPRESSIONS)
+def test_dp_train_step_all_compressions(compression):
+    cfg = BNNTrainerConfig(steps=2, batch=8, warmup_steps=1)
+    task = _BNNTask(cfg.model_config())
+    params = init_bnn_params(jax.random.PRNGKey(0))
+    n_dev = 2
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("data",))
+    batch = next(iter(synthetic_cifar_batches(
+        DataConfig(global_batch=8, seed=11))))
+    batch = {k: batch[k] for k in ("images", "labels")}
+    step = jax.jit(make_dp_train_step(
+        task, cfg.train_config(), mesh, grad_compression=compression,
+        clip_predicate=bnn_clip_predicate,
+    ))
+    err = init_dp_error_feedback(params, n_dev)
+    p, o, e, m1 = step(params, init_opt_state(params), err, batch)
+    p, o, e, m2 = step(p, o, e, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    # the residual stays stacked per shard and (for compressed paths)
+    # actually accumulates quantization error
+    lead = {leaf.shape[0] for leaf in jax.tree.leaves(e)}
+    assert lead == {n_dev}
+    if compression != "none":
+        assert any(np.any(np.asarray(leaf) != 0)
+                   for leaf in jax.tree.leaves(e))
+    # latent clip invariant survives the DP path too
+    for group in ("conv", "fc"):
+        for layer in p[group]:
+            w = np.asarray(layer["w"])
+            assert w.min() >= -1.0 and w.max() <= 1.0
+
+
+def test_dp_train_step_rejects_unknown_compression():
+    cfg = BNNTrainerConfig()
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="unknown grad_compression"):
+        make_dp_train_step(_BNNTask(cfg.model_config()),
+                           cfg.train_config(), mesh,
+                           grad_compression="fp8")
