@@ -1,0 +1,245 @@
+"""Training-chaos benchmark: a scripted fault plan against fault-free
+controls at equal total steps (DESIGN.md §13). Writes
+BENCH_train_chaos.json at the repo root.
+
+Four resilient runs share one process (and therefore one jitted-step
+cache — replays and controls never retrace):
+
+1. **control**   — 8-device sign-SGD DP run, no faults. Its per-save
+   param fingerprints are ground truth for every fixed-8-device gate.
+2. **chaosA**    — the IDENTICAL run under a scripted plan: a simulated
+   preemption, a torn checkpoint (MANIFEST deleted mid-write — which
+   *amplifies* the next rollback past it), and a NaN batch. No device
+   loss, so the device trajectory matches control's.
+3. **controlB**  — device loss only: one host dies at a pinned step,
+   8 -> 4 elastic shrink. This is the control for the shrink scenario:
+   a device-count change alters the all-reduce summation order, so the
+   fault-free 8-device run is NOT the right bit-identity reference —
+   the run with the same device trajectory is.
+4. **chaosB**    — chaosA's full plan PLUS the device loss. Must land
+   bit-identical to controlB.
+
+Gates (``--check`` exits nonzero on any failure):
+
+* **zero_runs_lost**       — every run finishes all steps with finite
+  params and a full loss history.
+* **bit_identical_A/B**    — final params bit-for-bit equal to the
+  matching control at equal total steps. Transient faults + the
+  stateless (seed, step) data stream mean recovery replays exactly the
+  clean updates; any drift is a resume bug.
+* **sentinel_catches_all_nan** — 100% of injected NaN-batch steps
+  appear in the sentinel's trip events.
+* **ef_mass_conserved**    — the 8 -> 4 error-feedback fold reports
+  relative mass delta <= 1e-5 in both shrink runs.
+* **bounded_recompute**    — replayed steps <= checkpoint cadence x
+  fired fault count, per run.
+* **resume_points_match**  — every restore's param fingerprint equals
+  the matching control's fingerprint at that checkpoint step.
+
+  PYTHONPATH=src python -m benchmarks.train_chaos [--smoke] [--check]
+"""
+
+from __future__ import annotations
+
+import os
+
+SIM_DEVICES = 8
+
+# Must precede the first jax backend touch; this module is an entry
+# point, so import time is early enough. A count already in XLA_FLAGS
+# (e.g. the CI leg's exported environment) wins.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={SIM_DEVICES}"
+    ).strip()
+
+import argparse  # noqa: E402
+import shutil  # noqa: E402
+import sys  # noqa: E402
+import tempfile  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks._util import bench_path, write_bench  # noqa: E402
+from repro.train.bnn_trainer import BNNTrainerConfig  # noqa: E402
+from repro.train.resilience import (  # noqa: E402
+    TrainFaultPlan,
+    TrainFaultSpec,
+    train_bnn_resilient,
+)
+
+EF_RTOL = 1e-5
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(tree))
+
+
+def _run(name: str, cfg_base: BNNTrainerConfig, root: str,
+         plan: TrainFaultPlan | None):
+    cfg = BNNTrainerConfig(
+        **{**cfg_base.__dict__, "checkpoint_dir": os.path.join(root, name)}
+    )
+    result = train_bnn_resilient(
+        cfg, faults=plan, n_devices=SIM_DEVICES, grad_compression="signsgd"
+    )
+    fired = len(plan.fired) if plan is not None else 0
+    return {
+        "name": name,
+        "result": result,
+        "fired": fired,
+        "steps": cfg.steps,
+        "cadence": cfg.checkpoint_every,
+    }
+
+
+def _summary(run) -> dict:
+    r = run["result"]
+    return {
+        "steps": run["steps"],
+        "faults_fired": run["fired"],
+        "events": [e["kind"] for e in r.events],
+        "recomputed_steps": r.recomputed_steps,
+        "restore_points": r.restore_points,
+        "device_trajectory": r.device_trajectory,
+        "final_n_devices": r.n_devices,
+        "final_loss": r.history["loss"][-1] if r.history["loss"] else None,
+        "history_len": len(r.history["loss"]),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (16 steps, batch 16)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if any gate fails")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        steps, batch, cadence = 12, 16, 3
+        preempt_at, torn_at, nan_at, loss_at = 4, 6, 7, 10
+    else:
+        steps, batch, cadence = 24, 16, 6
+        preempt_at, torn_at, nan_at, loss_at = 8, 12, 14, 20
+
+    cfg_base = BNNTrainerConfig(
+        steps=steps, batch=batch, checkpoint_every=cadence,
+        eval_batches=0, checkpoint_dir=None,
+    )
+    chaos_specs = [
+        TrainFaultSpec("preempt", at=preempt_at),
+        TrainFaultSpec("torn_ckpt", at=torn_at, flavor="torn"),
+        TrainFaultSpec("nan_batch", at=nan_at),
+    ]
+    loss_spec = TrainFaultSpec("device_loss", at=loss_at, host=5)
+
+    root = tempfile.mkdtemp(prefix="train_chaos_")
+    try:
+        control = _run("control", cfg_base, root, None)
+        plan_a = TrainFaultPlan(chaos_specs)
+        chaos_a = _run("chaosA", cfg_base, root, plan_a)
+        plan_cb = TrainFaultPlan([loss_spec])
+        control_b = _run("controlB", cfg_base, root, plan_cb)
+        plan_b = TrainFaultPlan(chaos_specs + [loss_spec])
+        chaos_b = _run("chaosB", cfg_base, root, plan_b)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    runs = [control, chaos_a, control_b, chaos_b]
+
+    zero_runs_lost = all(
+        len(r["result"].history["loss"]) == r["steps"]
+        and _finite(r["result"].params)
+        for r in runs
+    )
+    bit_identical_a = _trees_equal(control["result"].params,
+                                   chaos_a["result"].params)
+    bit_identical_b = _trees_equal(control_b["result"].params,
+                                   chaos_b["result"].params)
+
+    nan_steps = set(plan_a.steps_of("nan_batch"))
+    caught = {
+        e["step"] for r in (chaos_a, chaos_b)
+        for e in r["result"].events if e["kind"] == "sentinel_nan"
+    }
+    sentinel_catches_all_nan = nan_steps <= caught
+
+    folds = [
+        e for r in (control_b, chaos_b)
+        for e in r["result"].events if e["kind"] == "ef_folded"
+    ]
+    ef_mass_conserved = (
+        len(folds) == 2
+        and all(f["max_rel_delta"] <= EF_RTOL for f in folds)
+        and all(f["n_old"] == 8 and f["n_new"] == 4 for f in folds)
+    )
+
+    bounded_recompute = all(
+        r["result"].recomputed_steps <= r["cadence"] * max(r["fired"], 1)
+        for r in runs
+    )
+
+    def _resumes_ok(chaos, ctrl) -> bool:
+        fps = ctrl["result"].fingerprints
+        return all(
+            p["step"] in fps and p["params_sha"] == fps[p["step"]]
+            for p in chaos["result"].restore_points
+        )
+
+    resume_points_match = (
+        _resumes_ok(chaos_a, control) and _resumes_ok(chaos_b, control_b)
+    )
+
+    gates = {
+        "zero_runs_lost": bool(zero_runs_lost),
+        "bit_identical_A": bool(bit_identical_a),
+        "bit_identical_B": bool(bit_identical_b),
+        "sentinel_catches_all_nan": bool(sentinel_catches_all_nan),
+        "ef_mass_conserved": bool(ef_mass_conserved),
+        "bounded_recompute": bool(bounded_recompute),
+        "resume_points_match": bool(resume_points_match),
+    }
+    gates["all_ok"] = all(gates.values())
+
+    doc = {
+        "config": {
+            "smoke": bool(args.smoke), "steps": steps, "batch": batch,
+            "checkpoint_every": cadence, "n_devices": SIM_DEVICES,
+            "grad_compression": "signsgd", "ef_rtol": EF_RTOL,
+            "fault_plan": {
+                "preempt_at": preempt_at, "torn_ckpt_at": torn_at,
+                "nan_batch_at": nan_at, "device_loss_at": loss_at,
+                "device_loss_host": 5,
+            },
+        },
+        "runs": {r["name"]: _summary(r) for r in runs},
+        "ef_folds": folds,
+        "gates": gates,
+    }
+    write_bench(bench_path("train_chaos"), doc)
+
+    for name, ok in gates.items():
+        print(f"  {name:28s} {'PASS' if ok else 'FAIL'}")
+    for r in runs:
+        res = r["result"]
+        print(f"  {r['name']:10s} faults={r['fired']} "
+              f"recomputed={res.recomputed_steps} "
+              f"n_dev={res.n_devices} "
+              f"final_loss={res.history['loss'][-1]:.4f}")
+    if args.check and not gates["all_ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,85 +1,66 @@
-"""Fault-tolerant training demo: checkpoint cadence, simulated worker
-failure, elastic mesh rebuild, auto-resume from the latest valid step.
+"""Fault-tolerant BNN training demo (DESIGN.md §13): the resilient
+driver surviving a scripted fault plan — simulated preemption, a NaN
+batch caught by the loss sentinel and rolled back, a torn checkpoint —
+and finishing bit-identical to an uninterrupted run.
 
   PYTHONPATH=src python examples/fault_tolerant_training.py
 """
 
+import shutil
 import tempfile
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpoint import manager as ckpt
-from repro.configs import smoke_config, train_policy
-from repro.data.pipeline import DataConfig, synthetic_lm_batches
-from repro.distributed.fault_tolerance import (
-    HeartbeatMonitor,
-    WorkerFailure,
-    plan_mesh_for,
-    run_with_recovery,
+from repro.train.bnn_trainer import BNNTrainerConfig, train_bnn
+from repro.train.resilience import (
+    TrainFaultPlan,
+    TrainFaultSpec,
+    train_bnn_resilient,
 )
-from repro.models.model_factory import build_model
-from repro.train.step import TrainConfig, init_opt_state, make_train_step
 
 
 def main():
-    cfg = smoke_config("qwen2.5-3b")
-    model = build_model(cfg, train_policy())
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    opt = init_opt_state(params)
-    step_fn = jax.jit(make_train_step(model, TrainConfig()))
-
-    data_iter = synthetic_lm_batches(
-        DataConfig(global_batch=4, seq_len=32, vocab_size=cfg.vocab_size))
-    batches = [next(data_iter) for _ in range(40)]
-
-    ckpt_dir = tempfile.mkdtemp(prefix="ft_ckpt_")
-    state = {"params": params, "opt": opt}
-    crash_at = {"step": 12, "armed": True}
-    monitor = HeartbeatMonitor(num_hosts=2, timeout=1e9)
-    log = []
-
-    def train_one(step):
-        if step == crash_at["step"] and crash_at["armed"]:
-            crash_at["armed"] = False
-            print(f"  !! injected worker failure at step {step}")
-            raise WorkerFailure([1])
-        b = batches[step % len(batches)]
-        state["params"], state["opt"], m = step_fn(
-            state["params"], state["opt"],
-            {"tokens": b["tokens"], "labels": b["labels"]},
+    def cfg(ckpt_dir):
+        return BNNTrainerConfig(
+            steps=8, batch=8, checkpoint_every=2, eval_batches=2,
+            checkpoint_dir=ckpt_dir,
         )
-        log.append(step)
-        return {"loss": float(m["loss"])}
 
-    def save(step):
-        ckpt.save(ckpt_dir, step, state)
-        print(f"  checkpoint @ step {step}")
+    # The reference: the same run, uninterrupted.
+    ref_dir = tempfile.mkdtemp(prefix="bnn_ref_")
+    reference = train_bnn(cfg(ref_dir))
 
-    def restore():
-        latest = ckpt.latest_valid_step(ckpt_dir)
-        if latest is None:
-            return 0
-        restored = ckpt.restore(ckpt_dir, latest, state)
-        state.update(restored)
-        print(f"  restored from step {latest}")
-        return latest
+    # The chaos run: a preemption (process kill, restore from the last
+    # checkpoint), a torn checkpoint write (skipped as invalid by the
+    # next restore), and a NaN batch (the sentinel sees the non-finite
+    # grad norm, discards the poisoned update, replays clean).
+    plan = TrainFaultPlan([
+        TrainFaultSpec("preempt", at=3),
+        TrainFaultSpec("torn_ckpt", at=4),
+        TrainFaultSpec("nan_batch", at=5),
+    ])
+    chaos_dir = tempfile.mkdtemp(prefix="bnn_chaos_")
+    result = train_bnn_resilient(cfg(chaos_dir), faults=plan, verbose=True)
 
-    def rebuild(dead_hosts):
-        # elastic: plan the largest mesh from surviving devices
-        survivors = 512 - 256 * len(dead_hosts)
-        plan = plan_mesh_for(max(survivors, 1))
-        print(f"  rebuilt mesh for {survivors} devices: "
-              f"{plan.shape} {plan.axes}")
+    print("\nfault/recovery events:")
+    for e in result.events:
+        print(f"  step {e.get('step', '?'):>3}  {e['kind']}")
+    print(f"restore points: {[p['step'] for p in result.restore_points]}")
+    print(f"recomputed steps: {result.recomputed_steps}")
 
-    out = run_with_recovery(
-        num_steps=20, step_fn=train_one, save_fn=save, restore_fn=restore,
-        monitor=monitor, rebuild_fn=rebuild, checkpoint_every=5,
+    identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(reference.params),
+                        jax.tree.leaves(result.params))
     )
-    print(f"finished: last loss {out['loss']:.4f}; "
-          f"steps executed (with replay): {len(log)}")
-    assert log[-1] == 19
+    print(f"final params bit-identical to uninterrupted run: {identical}")
+    print(f"eval: loss {result.eval_loss:.4f} acc {result.eval_acc:.3f} "
+          f"(chance 0.10)")
+    assert identical, "resume bug: chaos run diverged from the reference"
+
+    shutil.rmtree(ref_dir, ignore_errors=True)
+    shutil.rmtree(chaos_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

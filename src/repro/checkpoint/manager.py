@@ -106,16 +106,28 @@ def is_valid(ckpt: str) -> bool:
         return False
 
 
+def _step_entries(directory: str) -> list[tuple[int, str]]:
+    """``(step, dirname)`` for every conforming ``step_<digits>`` entry,
+    sorted by step. Non-conforming names (``step_abc``, editor leftovers,
+    ``.tmp`` staging dirs) are silently skipped — a stray file in the
+    checkpoint directory must never be able to crash ``latest_valid_step``
+    or ``retain`` (they run inside the recovery path)."""
+    out = []
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        tail = name[len("step_"):]
+        if not tail.isdigit():
+            continue
+        out.append((int(tail), name))
+    return sorted(out)
+
+
 def latest_valid_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = sorted(
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    )
-    for step in reversed(steps):
-        if is_valid(os.path.join(directory, f"step_{step:08d}")):
+    for step, name in reversed(_step_entries(directory)):
+        if is_valid(os.path.join(directory, name)):
             return step
     return None
 
@@ -132,6 +144,16 @@ def restore(directory: str, step: int, like, *, shardings=None):
                 data.update({k: z[k] for k in z.files})
 
     keys = [k for k, _ in _leaf_paths(like)]
+    missing = [k for k in keys if k not in data]
+    if missing:
+        unexpected = [k for k in sorted(data) if k not in set(keys)]
+        raise ValueError(
+            f"checkpoint {ckpt} does not match the restore structure: "
+            f"missing leaf keys {missing}; unexpected leaf keys in the "
+            f"checkpoint {unexpected}. Pass a `like` tree with the same "
+            f"structure the checkpoint was saved with (keys are "
+            f"path-joined, e.g. 'params/conv/0/w')."
+        )
     leaves = [data[k] for k in keys]
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves
@@ -146,14 +168,8 @@ def restore(directory: str, step: int, like, *, shardings=None):
 def retain(directory: str, keep: int = 3) -> None:
     if not os.path.isdir(directory):
         return
-    steps = sorted(
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    )
-    for step in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, f"step_{step:08d}"),
-                      ignore_errors=True)
+    for _, name in _step_entries(directory)[:-keep]:
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
 class AsyncCheckpointer:
@@ -169,6 +185,7 @@ class AsyncCheckpointer:
         self.keep = keep
         self._q: queue.Queue = queue.Queue(maxsize=2)
         self._errors: list[BaseException] = []
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -188,6 +205,15 @@ class AsyncCheckpointer:
                 self._q.task_done()
 
     def save(self, step: int, tree) -> None:
+        if self._closed:
+            # The writer thread has exited; an enqueued snapshot would sit
+            # in the queue forever — silent checkpoint loss. Fail loudly.
+            raise RuntimeError(
+                "AsyncCheckpointer.save() after close(): the writer "
+                "thread has exited and this snapshot would never be "
+                "written. Create a new AsyncCheckpointer (or call save() "
+                "before close())."
+            )
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self._q.put((step, host_tree))
 
@@ -197,6 +223,9 @@ class AsyncCheckpointer:
             raise self._errors[0]
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         self._q.put(None)
         self._q.join()
         if self._errors:

@@ -14,6 +14,7 @@ actually decreasing.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue
 import threading
 from typing import Iterator, Optional
@@ -53,27 +54,42 @@ def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
     )
 
 
-def synthetic_cifar_batches(cfg: DataConfig) -> Iterator[dict]:
-    """Class-conditional Gaussian images — learnable 10-way problem."""
-    start, per_host = host_shard_slice(cfg)
+@functools.lru_cache(maxsize=8)
+def cifar_class_means(cfg: DataConfig) -> np.ndarray:
+    """The per-class image means — a pure function of ``cfg.seed``."""
     rng0 = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xC1FA]))
-    class_means = rng0.normal(
+    return rng0.normal(
         0.0, 1.0, (cfg.num_classes, cfg.image_size, cfg.image_size, 3)
     ).astype(np.float32)
+
+
+def cifar_batch_at(cfg: DataConfig, step: int) -> dict:
+    """The synthetic-CIFAR batch for ``step`` — random access into the
+    stateless stream. ``synthetic_cifar_batches`` yields exactly
+    ``cifar_batch_at(cfg, 0), cifar_batch_at(cfg, 1), ...``, so a
+    rollback/replay driver (train/resilience.py) can re-fetch any
+    step's batch bit-identically without holding an iterator."""
+    start, per_host = host_shard_slice(cfg)
+    class_means = cifar_class_means(cfg)
+    rng = _batch_rng(cfg, step)
+    labels = rng.integers(0, cfg.num_classes, cfg.global_batch)
+    noise = rng.normal(
+        0.0, 1.0, (cfg.global_batch, cfg.image_size, cfg.image_size, 3)
+    ).astype(np.float32)
+    images = class_means[labels] * 0.8 + noise
+    sl = slice(start, start + per_host)
+    return {
+        "images": jnp.asarray(images[sl]),
+        "labels": jnp.asarray(labels[sl].astype(np.int32)),
+        "step": step,
+    }
+
+
+def synthetic_cifar_batches(cfg: DataConfig) -> Iterator[dict]:
+    """Class-conditional Gaussian images — learnable 10-way problem."""
     step = 0
     while True:
-        rng = _batch_rng(cfg, step)
-        labels = rng.integers(0, cfg.num_classes, cfg.global_batch)
-        noise = rng.normal(
-            0.0, 1.0, (cfg.global_batch, cfg.image_size, cfg.image_size, 3)
-        ).astype(np.float32)
-        images = class_means[labels] * 0.8 + noise
-        sl = slice(start, start + per_host)
-        yield {
-            "images": jnp.asarray(images[sl]),
-            "labels": jnp.asarray(labels[sl].astype(np.int32)),
-            "step": step,
-        }
+        yield cifar_batch_at(cfg, step)
         step += 1
 
 

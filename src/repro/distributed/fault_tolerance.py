@@ -36,6 +36,24 @@ class WorkerFailure(RuntimeError):
         self.hosts = sorted(hosts)
 
 
+class Preemption(WorkerFailure):
+    """The scheduler killed this process (spot/preemptible capacity).
+
+    A preemption loses the in-memory state but no devices: ``hosts`` is
+    empty, so ``run_with_recovery`` takes the plain restart path —
+    restore from the latest valid checkpoint, no mesh rebuild. The
+    training chaos harness (train/resilience.py) raises this to
+    simulate a process kill in-process."""
+
+    def __init__(self, step: Optional[int] = None):
+        RuntimeError.__init__(
+            self,
+            "preempted" if step is None else f"preempted at step {step}",
+        )
+        self.hosts: list[int] = []
+        self.step = step
+
+
 class HeartbeatMonitor:
     def __init__(self, num_hosts: int, *, timeout: float = 60.0,
                  clock: Callable[[], float] = time.monotonic):
@@ -178,10 +196,16 @@ def run_with_recovery(
     rebuild_fn: Optional[Callable[[Sequence[int]], None]] = None,
     checkpoint_every: int = 50,
     max_restarts: int = 3,
+    on_failure: Optional[Callable[[WorkerFailure, int], None]] = None,
 ) -> dict:
     """Generic driver: runs ``step_fn`` with heartbeat checks and
     checkpoint cadence; on WorkerFailure rebuilds (elastic) and resumes
-    from the latest valid checkpoint. Returns the last metrics."""
+    from the latest valid checkpoint. Returns the last metrics.
+
+    ``on_failure(failure, step)`` (if given) observes every caught
+    failure with the step it interrupted, BEFORE the rebuild/restore —
+    the hook resilient drivers use to account recomputed work
+    (replayed steps = failed step - restored step)."""
     restarts = 0
     step = restore_fn()
     metrics: dict = {}
@@ -196,6 +220,8 @@ def run_with_recovery(
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if on_failure is not None:
+                on_failure(failure, step)
             if rebuild_fn is not None:
                 rebuild_fn(failure.hosts)
             for h in failure.hosts:   # evicted hosts stop being monitored

@@ -27,6 +27,12 @@ already 1-bit: gradients are the only fat tensors left).
 Checkpoints go through ``checkpoint/manager.py`` (full float latents +
 optimizer state, resumable); ``core.bnn.save_binary_checkpoint`` is the
 separate ~32x-smaller sign-form export for serving/goldens.
+
+For long or multi-device runs, ``train/resilience.py`` wraps this loop
+in the fault-tolerance machinery (heartbeats, loss-sentinel rollback,
+elastic shrink with error-feedback folding, bit-identical resume) —
+``train_bnn_resilient`` with a fault-free plan is bit-identical to
+``train_bnn``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,727 @@
+"""Chaos-hardened elastic BNN training (DESIGN.md §13).
+
+PR 8 hardened *serving* against faults; this module is the training
+half: it wires the dormant ``distributed.fault_tolerance`` machinery
+(`HeartbeatMonitor`, `StragglerDetector`, `run_with_recovery`,
+`plan_mesh_for`) into the real BNN trainer so a long STE run survives
+any injected fault and provably loses nothing:
+
+* :func:`train_bnn_resilient` — the resilient driver. Runs the exact
+  same step math as ``train_bnn`` (single device) or
+  ``make_dp_train_step`` (a 1-D ``("data",)`` mesh), under
+  ``run_with_recovery``: heartbeats each step, straggler eviction, a
+  checkpoint cadence that snapshots params + Adam state + the
+  per-device sign-SGD error-feedback residuals, and on any failure a
+  restore from the latest *valid* checkpoint. Because the data
+  pipeline is stateless (batch ``i`` is a pure function of
+  ``(data_seed, i)`` — ``data.pipeline.cifar_batch_at``), replayed
+  steps recompute the identical updates, so a recovered run's params
+  are bit-identical to an uninterrupted run's.
+* **Elastic shrink** — on ``WorkerFailure`` (device loss, straggler
+  eviction) the driver shrinks to the largest power-of-two surviving
+  device count (``plan_mesh_for`` on ``serving_shrink_plan``; powers
+  of two keep the global batch divisible), rebuilds the jitted DP step
+  for the new mesh, and restores from checkpoint. The dead devices'
+  error-feedback residuals are folded into survivor 0
+  (:func:`fold_error_feedback`) so compressed-gradient mass is
+  conserved — asserted against a float64 reference, not assumed.
+* :class:`LossSentinel` — NaN/inf and z-score loss-spike detection on
+  the metrics stream. A tripped sentinel raises
+  :class:`SentinelRollback`: the poisoned update is discarded, state
+  rolls back to the last valid checkpoint, and the run replays — no
+  human in the loop. A *sticky* poison (same step trips
+  ``max_rollbacks_per_step`` times) gets its batch skipped and the
+  event recorded.
+* :class:`TrainFaultPlan` — deterministic fault injection mirroring
+  ``serve.faults.FaultPlan``, keyed on exact step indices: ``preempt``
+  (simulated process kill), ``device_loss``, ``nan_batch``,
+  ``loss_spike``, ``straggler`` (inflated step time until the detector
+  evicts), and ``torn_ckpt`` (corrupts the checkpoint written at that
+  step). Faults are one-shot by default — a replayed step sees the
+  clean batch, exactly like a transient production fault — and every
+  firing is appended to ``plan.fired``.
+
+``benchmarks/train_chaos.py`` drives a scripted plan against fault-free
+controls and gates on bit-identity, EF-mass conservation, sentinel
+recall, and bounded recompute (BENCH_train_chaos.json).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import os
+from collections import deque
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt_manager
+from repro.core.bnn import init_bnn_params, update_bn_stats
+from repro.data.pipeline import DataConfig, cifar_batch_at
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    Preemption,
+    StragglerDetector,
+    WorkerFailure,
+    plan_mesh_for,
+    run_with_recovery,
+    serving_shrink_plan,
+)
+from repro.train.bnn_trainer import (
+    BNNTrainerConfig,
+    _BNNTask,
+    bnn_clip_predicate,
+    evaluate_bnn,
+    init_dp_error_feedback,
+    make_dp_train_step,
+)
+from repro.train.step import TrainConfig, init_opt_state, make_train_step
+
+__all__ = [
+    "TRAIN_FAULT_KINDS",
+    "TrainFaultSpec",
+    "TrainFaultPlan",
+    "LossSentinel",
+    "SentinelRollback",
+    "ResilienceConfig",
+    "ResilientTrainResult",
+    "fold_error_feedback",
+    "train_bnn_resilient",
+]
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection (serve/faults.py::FaultPlan, step-keyed)
+# ---------------------------------------------------------------------------
+
+
+TRAIN_FAULT_KINDS = (
+    "preempt",       # simulated process kill before executing the step
+    "device_loss",   # WorkerFailure([host]) -> elastic shrink
+    "nan_batch",     # the step's batch is poisoned to all-NaN images
+    "loss_spike",    # the step's images are scaled by `scale`
+    "straggler",     # host `host` reports 10x step times for `count` steps
+    "torn_ckpt",     # the checkpoint written at step `at` is corrupted
+)
+
+_TORN_FLAVORS = ("torn", "corrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainFaultSpec:
+    """One scheduled training fault, pinned to an exact step index.
+
+    ``kind`` is one of :data:`TRAIN_FAULT_KINDS`. Step-time faults fire
+    on ``at <= step < at + count``; ``torn_ckpt`` fires on the
+    checkpoint *written at* step ``at`` (``flavor="torn"`` deletes the
+    MANIFEST — a crash mid-write; ``"corrupt"`` appends junk to the
+    shard — bit rot caught by the checksum). ``sticky`` faults re-fire
+    when their step is replayed after a rollback (the default one-shot
+    behavior models a transient fault: the replay sees clean data).
+    """
+
+    kind: str
+    at: int
+    count: int = 1
+    host: int = 0
+    scale: float = 64.0
+    sticky: bool = False
+    flavor: str = "torn"
+
+    def __post_init__(self):
+        if self.kind not in TRAIN_FAULT_KINDS:
+            raise ValueError(f"unknown train fault kind {self.kind!r}; "
+                             f"expected one of {TRAIN_FAULT_KINDS}")
+        if self.flavor not in _TORN_FLAVORS:
+            raise ValueError(f"unknown torn_ckpt flavor {self.flavor!r}; "
+                             f"expected one of {_TORN_FLAVORS}")
+        if self.at < 0 or self.count < 1:
+            raise ValueError("need at >= 0 and count >= 1")
+
+
+class TrainFaultPlan:
+    """A deterministic schedule of :class:`TrainFaultSpec` entries.
+
+    ``match(step)`` returns the first step-time spec covering ``step``
+    that has not yet fired there (first match wins; non-``sticky``
+    (spec, step) pairs fire at most once, so a rollback replay sees the
+    clean step). ``match_save(step)`` is the same for ``torn_ckpt``
+    specs, keyed on the save step. Every firing is appended to
+    ``fired`` so harnesses can assert the realized schedule.
+    """
+
+    def __init__(self, specs: Sequence[TrainFaultSpec] = ()):
+        self.specs = tuple(specs)
+        self.fired: list[dict] = []
+        self._consumed: set[tuple[int, int]] = set()
+
+    def _match(self, step: int, *, save: bool) -> Optional[TrainFaultSpec]:
+        for j, spec in enumerate(self.specs):
+            if (spec.kind == "torn_ckpt") != save:
+                continue
+            if not spec.at <= step < spec.at + spec.count:
+                continue
+            key = (j, step)
+            if not spec.sticky and key in self._consumed:
+                continue
+            self._consumed.add(key)
+            return spec
+        return None
+
+    def match(self, step: int) -> Optional[TrainFaultSpec]:
+        return self._match(step, save=False)
+
+    def match_save(self, step: int) -> Optional[TrainFaultSpec]:
+        return self._match(step, save=True)
+
+    def on_fire(self, step: int, spec: TrainFaultSpec) -> None:
+        self.fired.append({"step": step, "kind": spec.kind,
+                           "host": spec.host})
+
+    def steps_of(self, kind: str) -> list[int]:
+        """Every step index a spec of ``kind`` is scheduled to fire at."""
+        return sorted(
+            s for spec in self.specs if spec.kind == kind
+            for s in range(spec.at, spec.at + spec.count)
+        )
+
+
+# ---------------------------------------------------------------------------
+# loss sentinel
+# ---------------------------------------------------------------------------
+
+
+class SentinelRollback(WorkerFailure):
+    """Raised by the driver when the :class:`LossSentinel` trips: the
+    just-applied update is poisoned (NaN/inf or a loss spike) and must
+    be rolled back to the last valid checkpoint. No devices died, so
+    ``hosts`` is empty — ``run_with_recovery`` takes the plain
+    restore path."""
+
+    def __init__(self, step: int, verdict: str):
+        RuntimeError.__init__(
+            self, f"loss sentinel tripped at step {step}: {verdict}")
+        self.hosts: list[int] = []
+        self.step = step
+        self.verdict = verdict
+
+
+class LossSentinel:
+    """NaN/inf + z-score loss-spike detection on the metrics stream.
+
+    ``check(step, loss)`` returns ``"nan"`` for a non-finite loss,
+    ``"spike"`` when ``loss > mean + z * max(std, rel_floor * |mean|,
+    1e-3)`` over the trailing ``window`` of accepted losses (only
+    checked once ``min_history`` losses are in), else ``None`` — and
+    only a clean loss is admitted into the history, so a poisoned step
+    can never drag the baseline toward itself. Every trip is recorded
+    in ``events``.
+
+    The floor terms keep a flat early-loss window (std ~ 0) from
+    tripping on normal noise; z defaults high because the sentinel's
+    job is catching *divergence* (a poisoned batch, an optimizer
+    blow-up), not ordinary variance.
+    """
+
+    def __init__(self, *, window: int = 16, z: float = 8.0,
+                 min_history: int = 4, rel_floor: float = 0.05):
+        self.window = int(window)
+        self.z = float(z)
+        self.min_history = int(min_history)
+        self.rel_floor = float(rel_floor)
+        self._hist: deque = deque(maxlen=self.window)
+        self.events: list[dict] = []
+
+    def check(self, step: int, loss: float,
+              grad_norm: Optional[float] = None) -> Optional[str]:
+        verdict = None
+        if not np.isfinite(loss):
+            verdict = "nan"
+        elif grad_norm is not None and not np.isfinite(grad_norm):
+            # Loss-only detection has a blind spot: the BNN's where()-
+            # based binarization maps NaN activations to -1, so a NaN
+            # *batch* yields a finite garbage-input loss (~log C) while
+            # the backward pass is NaN — the update poisons the params
+            # without the loss ever going non-finite. The gradient norm
+            # sees the backward pass, so it catches what the loss hides.
+            verdict = "nan"
+        elif len(self._hist) >= self.min_history:
+            vals = np.asarray(self._hist, dtype=np.float64)
+            mu = float(vals.mean())
+            sd = float(vals.std())
+            floor = max(sd, self.rel_floor * abs(mu), 1e-3)
+            if loss > mu + self.z * floor:
+                verdict = "spike"
+        if verdict is not None:
+            self.events.append({
+                "step": int(step), "kind": verdict, "loss": float(loss),
+                "grad_norm": None if grad_norm is None else float(grad_norm),
+            })
+            return verdict
+        self._hist.append(float(loss))
+        return None
+
+
+# ---------------------------------------------------------------------------
+# error-feedback folding across an elastic resize
+# ---------------------------------------------------------------------------
+
+
+def fold_error_feedback(err, n_new: int):
+    """Resize a stacked ``[n_old, ...]`` error-feedback residual tree to
+    ``n_new`` shards, conserving total residual mass.
+
+    Shrink: dead shards' residuals (rows ``n_new:``) are summed and
+    folded into survivor 0 — the quantization error those shards were
+    still owed re-enters the compressed all-reduce through the
+    survivor's next round instead of silently vanishing. Grow: new
+    shards start with zero residual (they are owed nothing).
+
+    Returns ``(folded, report)`` where ``report`` carries a float64
+    conservation check: per-leaf ``|sum(folded) - sum(err)|`` and its
+    maximum relative to the leaf's L1 mass. The only deltas are float32
+    re-association rounding in the fold itself, so the driver asserts
+    ``max_rel_delta`` under a tight tolerance — conservation is
+    checked, not assumed.
+    """
+    # restored checkpoints hand back plain numpy leaves; the fold uses
+    # jnp indexed-update, so normalize first
+    err = jax.tree.map(jnp.asarray, err)
+    leaves = jax.tree.leaves(err)
+    n_old = int(leaves[0].shape[0]) if leaves else int(n_new)
+    if n_new < 1:
+        raise ValueError(f"n_new must be >= 1, got {n_new}")
+
+    if n_old == n_new:
+        folded = err
+    elif n_new > n_old:
+        folded = jax.tree.map(
+            lambda e: jnp.concatenate(
+                [e, jnp.zeros((n_new - n_old,) + e.shape[1:], e.dtype)]),
+            err,
+        )
+    else:
+        folded = jax.tree.map(
+            lambda e: e[:n_new].at[0].add(jnp.sum(e[n_new:], axis=0)), err
+        )
+
+    max_abs = 0.0
+    max_rel = 0.0
+    mass_l1 = 0.0
+    for old_leaf, new_leaf in zip(jax.tree.leaves(err),
+                                  jax.tree.leaves(folded)):
+        old64 = np.asarray(old_leaf).astype(np.float64)
+        new64 = np.asarray(new_leaf).astype(np.float64)
+        delta = abs(float(new64.sum()) - float(old64.sum()))
+        l1 = float(np.abs(old64).sum())
+        mass_l1 += l1
+        max_abs = max(max_abs, delta)
+        max_rel = max(max_rel, delta / max(l1, 1e-12))
+    report = {
+        "n_old": n_old,
+        "n_new": int(n_new),
+        "mass_l1": mass_l1,
+        "max_abs_delta": max_abs,
+        "max_rel_delta": max_rel,
+    }
+    return folded, report
+
+
+# ---------------------------------------------------------------------------
+# cached step builders — replays and repeated harness runs must not retrace
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _single_device_step(task: _BNNTask, tcfg: TrainConfig):
+    return jax.jit(make_train_step(task, tcfg,
+                                   clip_predicate=bnn_clip_predicate))
+
+
+@functools.lru_cache(maxsize=None)
+def _dp_step(task: _BNNTask, tcfg: TrainConfig, n_devices: int,
+             grad_compression: str):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_devices]), ("data",))
+    return jax.jit(make_dp_train_step(
+        task, tcfg, mesh, grad_compression=grad_compression,
+        clip_predicate=bnn_clip_predicate,
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _ema_step(momentum: float):
+    return jax.jit(functools.partial(update_bn_stats, momentum=momentum))
+
+
+def _fingerprint(tree) -> str:
+    """sha256 over the tree's leaf keys + raw bytes — the bit-identity
+    currency of the chaos gates (two runs agree iff every param leaf is
+    bit-for-bit equal)."""
+    h = hashlib.sha256()
+    for key, leaf in ckpt_manager._leaf_paths(tree):
+        h.update(key.encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# the resilient driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    max_restarts: int = 16
+    keep_checkpoints: int = 8
+    sentinel_window: int = 16
+    sentinel_z: float = 8.0
+    sentinel_min_history: int = 4
+    # a step that trips the sentinel this many times is a sticky poison:
+    # skip its batch (recorded) instead of rolling back forever
+    max_rollbacks_per_step: int = 2
+    straggler_z: float = 3.0
+    straggler_patience: int = 3
+    heartbeat_timeout_s: float = 3600.0
+    ef_conservation_rtol: float = 1e-5
+
+
+@dataclasses.dataclass
+class ResilientTrainResult:
+    params: Any
+    opt_state: Any
+    err: Any                    # EF residual tree, [n_devices, ...] leaves
+    history: dict               # {"loss": [...], "acc": [...], "lr_scale": [...]}
+    events: list                # faults, rollbacks, shrinks, folds, skips
+    fingerprints: dict          # checkpoint step -> params sha256
+    restore_points: list        # [{"step", "params_sha"}] per restore
+    recomputed_steps: int       # replayed work across all recoveries
+    device_trajectory: list     # [(step, n_devices)] incl. the start
+    n_devices: int              # final mesh size
+    skipped_steps: list         # sticky-poison batches dropped
+    eval_loss: Optional[float]
+    eval_acc: Optional[float]
+
+
+def train_bnn_resilient(
+    cfg: BNNTrainerConfig,
+    *,
+    resilience: ResilienceConfig = ResilienceConfig(),
+    faults: Optional[TrainFaultPlan] = None,
+    n_devices: int = 1,
+    grad_compression: str = "signsgd",
+    verbose: bool = False,
+) -> ResilientTrainResult:
+    """Train the CIFAR BNN under ``run_with_recovery``: heartbeat checks
+    and straggler eviction each step, checkpoint cadence
+    ``cfg.checkpoint_every`` (params + Adam state + EF residuals), loss
+    sentinel with rollback, and elastic shrink on device loss.
+
+    Single-device (``n_devices=1``) runs use the exact ``train_bnn``
+    step math — a fault-free resilient run is bit-identical to
+    ``train_bnn`` — and multi-device runs use ``make_dp_train_step``
+    over a 1-D ``("data",)`` mesh with ``grad_compression``. A fresh
+    process pointed at the same ``checkpoint_dir`` resumes from the
+    latest valid checkpoint, which is what makes a REAL preemption
+    (process kill) recoverable, not just the simulated one.
+    """
+    if not cfg.checkpoint_dir:
+        raise ValueError(
+            "train_bnn_resilient needs cfg.checkpoint_dir: rollback and "
+            "preemption recovery restore from checkpoints, so a run "
+            "without a checkpoint directory cannot be made resilient"
+        )
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_devices > jax.device_count():
+        raise ValueError(
+            f"n_devices={n_devices} but only {jax.device_count()} jax "
+            f"devices are visible; off-TPU, force simulated host devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_devices} before jax initializes"
+        )
+    if cfg.batch % n_devices:
+        raise ValueError(
+            f"global batch {cfg.batch} is not divisible by "
+            f"n_devices={n_devices}"
+        )
+
+    task = _BNNTask(cfg.model_config())
+    tcfg = cfg.train_config()
+    data_cfg = DataConfig(seed=cfg.data_seed, global_batch=cfg.batch)
+    ema = _ema_step(cfg.bn_momentum)
+    cadence = max(1, int(cfg.checkpoint_every))
+
+    sentinel = LossSentinel(
+        window=resilience.sentinel_window, z=resilience.sentinel_z,
+        min_history=resilience.sentinel_min_history,
+    )
+    detector = StragglerDetector(z=resilience.straggler_z,
+                                 patience=resilience.straggler_patience)
+    monitor = HeartbeatMonitor(num_hosts=n_devices,
+                               timeout=resilience.heartbeat_timeout_s)
+
+    def fresh_state(n: int) -> dict:
+        params = init_bnn_params(jax.random.PRNGKey(cfg.seed))
+        return {
+            "params": params,
+            "opt": init_opt_state(params),
+            "err": init_dp_error_feedback(params, n),
+        }
+
+    st = {
+        "state": fresh_state(n_devices),
+        "live": list(range(n_devices)),
+        "n": n_devices,
+        "fail_step": None,
+        "rollbacks_at": {},
+    }
+    history: dict[int, dict] = {}
+    events: list[dict] = []
+    fingerprints: dict[int, str] = {}
+    restore_points: list[dict] = []
+    skip_steps: set[int] = set()
+    device_trajectory: list[tuple[int, int]] = [(0, n_devices)]
+    recomputed = {"steps": 0}
+
+    def step_callable():
+        if st["n"] == 1:
+            return _single_device_step(task, tcfg)
+        return _dp_step(task, tcfg, st["n"], grad_compression)
+
+    def step_fn(step: int) -> dict:
+        spec = faults.match(step) if faults is not None else None
+        if spec is not None and spec.kind == "preempt":
+            faults.on_fire(step, spec)
+            events.append({"kind": "preempt", "step": step})
+            raise Preemption(step)
+        if spec is not None and spec.kind == "device_loss":
+            faults.on_fire(step, spec)
+            events.append({"kind": "device_loss", "step": step,
+                           "host": spec.host})
+            raise WorkerFailure([spec.host])
+
+        if step in skip_steps:
+            events.append({"kind": "skipped_batch", "step": step})
+            return {"skipped": True, "step": step}
+
+        batch = cifar_batch_at(data_cfg, step)
+        feed = {"images": batch["images"], "labels": batch["labels"]}
+        if spec is not None and spec.kind == "nan_batch":
+            faults.on_fire(step, spec)
+            events.append({"kind": "nan_batch", "step": step})
+            feed["images"] = jnp.full_like(feed["images"], jnp.nan)
+        elif spec is not None and spec.kind == "loss_spike":
+            faults.on_fire(step, spec)
+            events.append({"kind": "loss_spike", "step": step,
+                           "scale": spec.scale})
+            # A pure image rescale is absorbed exactly by BatchNorm
+            # (conv is linear; BN normalizes with the poisoned batch's
+            # own statistics), so the poison that actually moves the
+            # loss is mislabeled signal: rotate every label half the
+            # class circle. The rescale rides along as a realistic
+            # corruption artifact.
+            half = data_cfg.num_classes // 2
+            feed["images"] = feed["images"] * spec.scale
+            feed["labels"] = (feed["labels"] + half) % data_cfg.num_classes
+
+        state = st["state"]
+        if st["n"] == 1:
+            params, opt, metrics = step_callable()(
+                state["params"], state["opt"], feed)
+            err = state["err"]
+        else:
+            params, opt, err, metrics = step_callable()(
+                state["params"], state["opt"], state["err"], feed)
+        params = ema(params, metrics.pop("bn_stats"))
+        st["state"] = {"params": params, "opt": opt, "err": err}
+        loss = float(metrics["loss"])
+
+        # Straggler eviction: every live host reports a step time; an
+        # injected straggler reports 10x until the detector's patience
+        # runs out, then is evicted like a dead worker. All "hosts" here
+        # are simulated by ONE process, so the real wall clock carries
+        # no per-host signal — worse, its shared-CPU noise (GC pauses,
+        # neighbor load) exceeds the detector's 5% band and can flag the
+        # whole uniform fleet at once. Healthy hosts therefore report a
+        # synthetic unit time, which is exactly the detector's contract:
+        # relative per-host step times.
+        times = {h: 1.0 for h in st["live"]}
+        if spec is not None and spec.kind == "straggler":
+            faults.on_fire(step, spec)
+            times[spec.host] = 10.0
+        flagged = detector.observe(times)
+        if flagged:
+            events.append({"kind": "straggler_evicted", "step": step,
+                           "hosts": sorted(flagged)})
+            raise WorkerFailure(flagged)
+
+        for h in st["live"]:
+            monitor.beat(h)
+
+        verdict = sentinel.check(step, loss,
+                                 grad_norm=float(metrics["grad_norm"]))
+        if verdict is not None:
+            count = st["rollbacks_at"].get(step, 0) + 1
+            st["rollbacks_at"][step] = count
+            events.append({"kind": f"sentinel_{verdict}", "step": step,
+                           "loss": loss, "rollback": count})
+            if count >= resilience.max_rollbacks_per_step:
+                skip_steps.add(step)
+                events.append({"kind": "poisoned_window_skipped",
+                               "step": step})
+            raise SentinelRollback(step, verdict)
+
+        history[step] = {"loss": loss, "acc": float(metrics["acc"]),
+                         "lr_scale": float(metrics["lr_scale"])}
+        if verbose and (step % cfg.log_every == 0 or step == cfg.steps - 1):
+            print(f"step {step:4d} loss {loss:.4f} "
+                  f"acc {history[step]['acc']:.3f} n_dev {st['n']}")
+        return {"loss": loss, "step": step}
+
+    def save_fn(step: int) -> None:
+        # Defense in depth behind the sentinel: a poisoned update that
+        # somehow kept both loss and grad_norm finite must still never
+        # reach disk — a non-finite checkpoint would turn every later
+        # rollback into a restore of the poison itself.
+        bad = [
+            k for k, leaf in ckpt_manager._leaf_paths(st["state"]["params"])
+            if not np.isfinite(np.asarray(leaf)).all()
+        ]
+        if bad:
+            events.append({"kind": "poisoned_checkpoint_averted",
+                           "step": step, "leaves": bad[:8]})
+            raise SentinelRollback(step, "nonfinite_params")
+        fingerprints[step] = _fingerprint(st["state"]["params"])
+        path = ckpt_manager.save(cfg.checkpoint_dir, step, st["state"])
+        spec = faults.match_save(step) if faults is not None else None
+        if spec is not None:
+            faults.on_fire(step, spec)
+            events.append({"kind": "torn_ckpt", "step": step,
+                           "flavor": spec.flavor})
+            if spec.flavor == "torn":
+                os.remove(os.path.join(path, "MANIFEST.json"))
+            else:
+                shard = os.path.join(path, "shard_00000.npz")
+                with open(shard, "ab") as f:
+                    f.write(b"\x00corruption")
+        ckpt_manager.retain(cfg.checkpoint_dir,
+                            keep=resilience.keep_checkpoints)
+
+    def restore_fn() -> int:
+        latest = ckpt_manager.latest_valid_step(cfg.checkpoint_dir)
+        if latest is None:
+            st["state"] = fresh_state(st["n"])
+            restored = 0
+            if st["fail_step"] is not None:
+                events.append({"kind": "restored_fresh", "step": 0})
+        else:
+            tree = ckpt_manager.restore(
+                cfg.checkpoint_dir, latest, st["state"])
+            err = tree["err"]
+            n_saved = int(jax.tree.leaves(err)[0].shape[0])
+            if n_saved != st["n"]:
+                err, report = fold_error_feedback(err, st["n"])
+                if report["max_rel_delta"] > resilience.ef_conservation_rtol:
+                    raise RuntimeError(
+                        f"error-feedback mass NOT conserved folding "
+                        f"{n_saved} -> {st['n']} shards: relative delta "
+                        f"{report['max_rel_delta']:.3e} exceeds "
+                        f"{resilience.ef_conservation_rtol:.1e} "
+                        f"(report: {report})"
+                    )
+                events.append({"kind": "ef_folded", "step": latest,
+                               **report})
+            st["state"] = {"params": tree["params"], "opt": tree["opt"],
+                           "err": err}
+            restored = latest
+            restore_points.append({
+                "step": latest,
+                "params_sha": _fingerprint(tree["params"]),
+            })
+        if st["fail_step"] is not None:
+            recomputed["steps"] += max(0, st["fail_step"] - restored)
+            st["fail_step"] = None
+        for s in [s for s in history if s >= restored]:
+            del history[s]
+        return restored
+
+    def on_failure(failure: WorkerFailure, step: int) -> None:
+        st["fail_step"] = step
+
+    def rebuild_fn(dead_hosts: Sequence[int]) -> None:
+        if not dead_hosts:
+            return  # preemption / sentinel rollback: no mesh change
+        st["live"] = [h for h in st["live"] if h not in set(dead_hosts)]
+        if not st["live"]:
+            raise RuntimeError("no surviving devices to rebuild a mesh")
+        n_new = serving_shrink_plan(len(st["live"]))
+        plan = plan_mesh_for(n_new)
+        n_new = plan.num_devices
+        if cfg.batch % n_new:
+            raise RuntimeError(
+                f"cannot shrink to {n_new} devices: global batch "
+                f"{cfg.batch} is not divisible"
+            )
+        events.append({"kind": "elastic_shrink", "step": st["fail_step"],
+                       "from": st["n"], "to": n_new,
+                       "survivors": len(st["live"]),
+                       "plan": {"shape": list(plan.shape),
+                                "axes": list(plan.axes)}})
+        st["n"] = n_new
+
+    final_metrics = run_with_recovery(
+        num_steps=cfg.steps,
+        step_fn=step_fn,
+        save_fn=save_fn,
+        restore_fn=restore_fn,
+        monitor=monitor,
+        rebuild_fn=rebuild_fn,
+        checkpoint_every=cadence,
+        max_restarts=resilience.max_restarts,
+        on_failure=on_failure,
+    )
+    del final_metrics  # per-step metrics live in `history`
+    if cfg.steps % cadence != 0:
+        save_fn(cfg.steps)
+    else:
+        fingerprints.setdefault(
+            cfg.steps, _fingerprint(st["state"]["params"]))
+    for step, n in [(e["step"], e["to"]) for e in events
+                    if e["kind"] == "elastic_shrink"]:
+        device_trajectory.append((step, n))
+
+    eval_loss = eval_acc = None
+    if cfg.eval_batches > 0:
+        eval_iter = (cifar_batch_at(data_cfg, s)
+                     for s in range(cfg.steps, cfg.steps + cfg.eval_batches))
+        eval_loss, eval_acc = evaluate_bnn(
+            st["state"]["params"], eval_iter, batches=cfg.eval_batches,
+            use_scale=cfg.use_scale,
+        )
+
+    ordered = sorted(history)
+    return ResilientTrainResult(
+        params=st["state"]["params"],
+        opt_state=st["state"]["opt"],
+        err=st["state"]["err"],
+        history={
+            "loss": [history[s]["loss"] for s in ordered],
+            "acc": [history[s]["acc"] for s in ordered],
+            "lr_scale": [history[s]["lr_scale"] for s in ordered],
+        },
+        events=events,
+        fingerprints=fingerprints,
+        restore_points=restore_points,
+        recomputed_steps=recomputed["steps"],
+        device_trajectory=device_trajectory,
+        n_devices=st["n"],
+        skipped_steps=sorted(skip_steps),
+        eval_loss=eval_loss,
+        eval_acc=eval_acc,
+    )

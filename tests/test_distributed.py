@@ -438,3 +438,50 @@ def test_async_checkpointer(tmp_path):
     assert not os.path.exists(os.path.join(tmp_path, "step_00000001"))
     out = ckpt.restore(str(tmp_path), 3, {"x": jnp.zeros((4,))})
     np.testing.assert_allclose(out["x"], 3.0)
+
+
+def test_stray_entries_do_not_crash_latest_valid_step(tmp_path):
+    # A stray non-conforming entry in the checkpoint dir (editor
+    # leftover, half-renamed staging dir) must be skipped, not crash the
+    # recovery path with int("abc").
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path), 5, tree)
+    for stray in ("step_abc", "step_", "step_7.tmp", "notes.txt"):
+        p = os.path.join(tmp_path, stray)
+        if stray.endswith(".txt"):
+            with open(p, "w") as f:
+                f.write("stray")
+        else:
+            os.makedirs(p)
+    assert ckpt.latest_valid_step(str(tmp_path)) == 5
+
+
+def test_stray_entries_do_not_crash_retain(tmp_path):
+    tree = {"a": jnp.arange(4.0)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree)
+    os.makedirs(os.path.join(tmp_path, "step_abc"))
+    ckpt.retain(str(tmp_path), keep=2)
+    assert ckpt.latest_valid_step(str(tmp_path)) == 4
+    assert not os.path.exists(os.path.join(tmp_path, "step_00000001"))
+    # the stray entry is left alone (retain only manages step dirs)
+    assert os.path.exists(os.path.join(tmp_path, "step_abc"))
+
+
+def test_restore_schema_mismatch_is_actionable(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"params": {"w": jnp.ones((2,))}})
+    bad_like = {"params": {"w": jnp.zeros((2,)), "extra": jnp.zeros(())}}
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(str(tmp_path), 1, bad_like)
+    msg = str(ei.value)
+    assert "params/extra" in msg        # missing from the checkpoint
+    assert "missing" in msg and "unexpected" in msg
+
+
+def test_async_checkpointer_save_after_close_raises(tmp_path):
+    w = ckpt.AsyncCheckpointer(str(tmp_path))
+    w.save(1, {"x": jnp.zeros((2,))})
+    w.close()
+    with pytest.raises(RuntimeError, match="after close"):
+        w.save(2, {"x": jnp.ones((2,))})
+    w.close()  # idempotent
